@@ -1,0 +1,58 @@
+"""The paper's headline trade-off: balancing communication and computing
+costs under a WALL-CLOCK budget (abstract / Sec. I).
+
+For a grid of (tau1, tau2) we measure convergence per ROUND empirically and
+model round wall-clock as tau1 * t_compute + tau2 * t_comm for a given
+compute/comm speed ratio (metrics.comm_compute_cost); the best (tau1, tau2)
+shifts toward more local computation as links get slower — the balance DFL
+exposes and C-SGD/D-SGD cannot tune.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import RunSpec, print_csv, run_dfl_cnn, save_result
+from repro.core.metrics import comm_compute_cost
+
+GRID = [(1, 1), (2, 2), (4, 1), (4, 4), (8, 2), (1, 4)]
+# compute:comm cost ratios to evaluate (t_comm / t_compute per step).
+RATIOS = (0.2, 1.0, 5.0)
+
+
+def run(flavor: str = "mnist", rounds: int = 50):
+    runs = {}
+    for (t1, t2) in GRID:
+        spec = RunSpec(name=f"bal-{t1}-{t2}", tau1=t1, tau2=t2,
+                       topology="ring", flavor=flavor, rounds=rounds)
+        runs[(t1, t2)] = run_dfl_cnn(spec)
+    rows = []
+    results = {"runs": {f"{k}": v for k, v in runs.items()}, "winners": {}}
+    for ratio in RATIOS:
+        best = None
+        for (t1, t2), out in runs.items():
+            h = out["history"]
+            per_round = t1 * 1.0 + t2 * ratio  # arbitrary compute unit
+            budget = 40 * (1 + ratio) * 4      # fixed wall-clock budget
+            n_rounds = int(budget / per_round)
+            idx = min(range(len(h["round"])),
+                      key=lambda i: abs(h["round"][i] - n_rounds))
+            loss = h["global_loss"][idx]
+            rows.append({"bench": "balance", "comm/comp": ratio,
+                         "tau1": t1, "tau2": t2,
+                         "rounds_in_budget": n_rounds,
+                         "loss_at_budget": round(loss, 4)})
+            if best is None or loss < best[0]:
+                best = (loss, t1, t2)
+        results["winners"][str(ratio)] = best
+        rows.append({"bench": "balance", "comm/comp": ratio,
+                     "tau1": f"BEST={best[1]}", "tau2": best[2],
+                     "rounds_in_budget": "",
+                     "loss_at_budget": round(best[0], 4)})
+    save_result(f"balance_{flavor}", results)
+    print_csv(rows, ["bench", "comm/comp", "tau1", "tau2",
+                     "rounds_in_budget", "loss_at_budget"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

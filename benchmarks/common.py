@@ -1,0 +1,137 @@
+"""Shared harness for the paper-reproduction benchmarks (Figs. 7-10, Table I).
+
+Trains the paper's CNN (Appendix C) with DFL/C-DFL on the synthetic
+MNIST-/CIFAR-shaped datasets (offline container — DESIGN.md section 7) over
+the paper's 10-node topologies, and reports training-loss / test-accuracy
+trajectories plus exact wire-byte accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DFLConfig, average_model, fully_connected, init_state, make_compressor,
+    make_round_fn, paper_quasi_ring, ring, round_wire_bits,
+)
+from repro.data.images import SyntheticImages, image_batches_for_dfl
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+from repro.optim import sgd
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "repro")
+
+_DATA_CACHE: Dict = {}
+
+
+def get_data(flavor: str) -> SyntheticImages:
+    if flavor not in _DATA_CACHE:
+        # sized for the single-CPU container: large enough for stable
+        # non-IID statistics across 10 nodes, small enough that a bench
+        # config finishes in ~2 minutes.
+        _DATA_CACHE[flavor] = SyntheticImages(
+            flavor=flavor, train_size=3000, test_size=600, seed=7)
+    return _DATA_CACHE[flavor]
+
+
+@dataclasses.dataclass
+class RunSpec:
+    name: str
+    tau1: int = 4
+    tau2: int = 4
+    topology: str = "ring"          # ring | quasi | full | disconnected-ish
+    compression: str = ""
+    comp_kwargs: Optional[dict] = None
+    gamma: float = 1.0
+    lr: float = 0.05                # synthetic data needs a livelier lr than
+    flavor: str = "mnist"           # the paper's 0.002 on real MNIST
+    nodes: int = 10
+    rounds: int = 40
+    batch: int = 16
+    partition: str = "dirichlet"
+    seed: int = 0
+
+    def topology_obj(self):
+        if self.topology == "ring":
+            return ring(self.nodes)
+        if self.topology == "quasi":
+            return paper_quasi_ring()
+        if self.topology == "full":
+            return fully_connected(self.nodes)
+        raise ValueError(self.topology)
+
+
+def run_dfl_cnn(spec: RunSpec, log_every: int = 5) -> Dict:
+    data = get_data(spec.flavor)
+    parts = data.partition(spec.nodes, scheme=spec.partition, seed=spec.seed)
+    comp = (make_compressor(spec.compression, **(spec.comp_kwargs or {}))
+            if spec.compression else None)
+    cfg = DFLConfig(tau1=spec.tau1, tau2=spec.tau2,
+                    topology=spec.topology_obj(),
+                    compression=comp, gamma=spec.gamma)
+    opt = sgd(spec.lr)
+
+    def loss_fn(params, batch, key=None):
+        return cnn_loss(params, batch, flavor=spec.flavor)
+
+    params0 = init_cnn(jax.random.key(spec.seed), spec.flavor)
+    state = init_state(params0, spec.nodes, opt, jax.random.key(spec.seed + 1),
+                       compressed=cfg.is_compressed)
+    round_fn = jax.jit(make_round_fn(cfg, loss_fn, opt))
+    eval_fn = jax.jit(lambda p, x, y: cnn_accuracy(p, x, y, spec.flavor))
+    # global train loss F(u) of the averaged model — the quantity the
+    # paper's training-loss curves (and Prop. 1) track.
+    gloss_fn = jax.jit(lambda p, x, y: cnn_loss(p, (x, y), spec.flavor))
+    bits_per_round = round_wire_bits(cfg, params0)
+
+    test_x = jnp.asarray(data.test_x)
+    test_y = jnp.asarray(data.test_y)
+    gtrain_x = jnp.asarray(data.train_x[:1000])
+    gtrain_y = jnp.asarray(data.train_y[:1000])
+    hist: Dict[str, List[float]] = {
+        "round": [], "iteration": [], "loss": [], "global_loss": [],
+        "consensus": [], "test_acc": [], "gbits": [],
+    }
+    t0 = time.time()
+    for r in range(spec.rounds):
+        xs, ys = image_batches_for_dfl(
+            data, parts, spec.tau1, spec.batch, r, seed=spec.seed)
+        state, m = round_fn(state, (jnp.asarray(xs), jnp.asarray(ys)))
+        if (r + 1) % log_every == 0 or r == spec.rounds - 1:
+            avg = average_model(state.params)
+            acc = float(eval_fn(avg, test_x, test_y))
+            hist["round"].append(r + 1)
+            hist["iteration"].append((r + 1) * (spec.tau1 + spec.tau2))
+            hist["loss"].append(float(m["loss"]))
+            hist["global_loss"].append(float(gloss_fn(avg, gtrain_x,
+                                                      gtrain_y)))
+            hist["consensus"].append(float(m["consensus_sq"]))
+            hist["test_acc"].append(acc)
+            hist["gbits"].append((r + 1) * bits_per_round / 1e9)
+    return {
+        "spec": dataclasses.asdict(spec),
+        "bits_per_round": bits_per_round,
+        "zeta": spec.topology_obj().zeta,
+        "wall_s": round(time.time() - t0, 1),
+        "history": hist,
+    }
+
+
+def save_result(name: str, payload: Dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def print_csv(rows: List[Dict], cols: List[str]) -> None:
+    print(",".join(cols))
+    for row in rows:
+        print(",".join(str(row.get(c, "")) for c in cols))

@@ -1,0 +1,60 @@
+"""Re-run the loop-aware HLO analysis over dumped .hlo artifacts and patch
+the corresponding results/dryrun JSONs in place (analysis iterations don't
+need recompiles).
+
+    PYTHONPATH=src python -m benchmarks.reanalyze
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def main() -> None:
+    from repro.launch.hloanalysis import analyze_text
+    from repro.launch.roofline import Roofline
+
+    n = 0
+    for hpath in sorted(glob.glob(os.path.join(DRY, "hlo", "*.hlo"))):
+        base = os.path.basename(hpath)[:-4]
+        parts = base.split("__")
+        arch, shape, pod, kind = parts[0], parts[1], parts[2], parts[3]
+        tag = parts[4] if len(parts) > 4 else ""
+        jname = f"{arch}__{shape}__{pod}" + (f"__{tag}" if tag else "")
+        jpath = os.path.join(DRY, jname + ".json")
+        if not os.path.exists(jpath):
+            continue
+        with open(jpath) as f:
+            blob = json.load(f)
+        # map hlo kind -> json key (headline json key is 'headline')
+        jkey = None
+        for k, rec in blob.items():
+            if rec.get("kind") == kind or (k == "headline" and kind in (
+                    "headline", rec.get("kind", ""))):
+                jkey = k
+                break
+        if jkey is None:
+            continue
+        with open(hpath) as f:
+            corr = analyze_text(f.read())
+        rec = blob[jkey]
+        roof = Roofline(flops=corr["flops"], hbm_bytes=corr["bytes"],
+                        collective_bytes=corr["collective_bytes"],
+                        chips=rec.get("chips", 256))
+        rec["corrected"] = corr
+        rec["roofline"] = roof.as_dict()
+        blob[jkey] = rec
+        with open(jpath, "w") as f:
+            json.dump(blob, f, indent=1, default=str)
+        n += 1
+    print(f"re-analyzed {n} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Render the dry-run JSONs (results/dryrun/*.json) into the EXPERIMENTS.md
+roofline tables: per (arch x shape x mesh) the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS ratio, and per-device memory."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import REGISTRY
+from repro.configs.base import SHAPES
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_all(dir_: str = DRYRUN_DIR) -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            blob = json.load(f)
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        arch, shape, pod = parts[0], parts[1], parts[2]
+        tag = parts[3] if len(parts) > 3 else ""
+        for kind, rec in blob.items():
+            rec = dict(rec)
+            rec.setdefault("arch", arch)
+            rec.setdefault("shape", shape)
+            rec["pod"] = pod
+            rec["tag"] = tag
+            rec["file_kind"] = kind
+            out.append(rec)
+    return out
+
+
+def model_flops_for(arch_id: str, shape_name: str, kind: str,
+                    chips: int) -> Optional[float]:
+    """Per-device MODEL_FLOPS (6*N_active*D train / 2*N_active*B decode)."""
+    arch = REGISTRY[arch_id]
+    shape = SHAPES[shape_name]
+    na = arch.model.active_param_count()
+    if kind in ("round", "local"):
+        tokens = shape.global_batch * shape.seq_len
+        mult = 4.0 if kind == "round" else 1.0   # default round has tau1=4
+        return 6.0 * na * tokens * mult / chips
+    if kind == "prefill":
+        return 2.0 * na * shape.global_batch * shape.seq_len / chips
+    if kind == "decode":
+        return 2.0 * na * shape.global_batch / chips
+    return None
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def render_table(records: List[Dict], pod: str = "1pod",
+                 kinds=("local", "gossip", "prefill", "decode"),
+                 tag: str = "") -> str:
+    lines = [
+        "| arch | shape | kind | compute | memory | collective | dominant "
+        "| MODEL/HLO flops | HBM/dev (args) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in records:
+        if not rec.get("ok") or rec["pod"] != pod or rec.get("tag", "") != tag:
+            continue
+        if rec.get("kind") not in kinds:
+            continue
+        roof = rec["roofline"]
+        if rec["kind"] == "gossip":
+            mf = None
+        else:
+            mf = model_flops_for(rec["arch"], rec["shape"], rec["kind"],
+                                 rec.get("chips", 256))
+        ratio = f"{mf / roof['flops']:.2f}" if mf and roof["flops"] else "-"
+        mem = rec.get("memory", {})
+        args_gib = mem.get("argument_size_in_bytes", 0) / 2**30
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['kind']} "
+            f"| {fmt_s(roof['compute_s'])} | {fmt_s(roof['memory_s'])} "
+            f"| {fmt_s(roof['collective_s'])} | **{roof['dominant']}** "
+            f"| {ratio} | {args_gib:.2f} GiB |")
+    return "\n".join(lines)
+
+
+def summarize(pod: str = "1pod") -> None:
+    recs = load_all()
+    print(render_table(recs, pod=pod))
+
+
+if __name__ == "__main__":
+    import sys
+
+    summarize(sys.argv[1] if len(sys.argv) > 1 else "1pod")

@@ -1,0 +1,75 @@
+"""Benchmark entrypoint: one bench per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run              # reduced scale
+    PYTHONPATH=src python -m benchmarks.run --full       # paper scale-ish
+    PYTHONPATH=src python -m benchmarks.run --only fig7
+
+Emits CSV rows (bench,label,...) per bench plus the roofline summary table
+if dry-run results exist.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="longer runs (closer to paper scale)")
+    ap.add_argument("--only", default="",
+                    help="comma list: fig7,fig8,fig9,fig10,table1,theory,"
+                         "balance,roofline")
+    args = ap.parse_args()
+    rounds = 150 if args.full else 40
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    t0 = time.time()
+    from benchmarks import (bench_balance, fig7_tau2, fig8_tau1, fig9_zeta,
+                            fig10_cdfl, roofline_report, table1_methods)
+
+    if want("fig7"):
+        print("# Fig 7 — effect of tau2 (DFL vs C-SGD), ring")
+        fig7_tau2.run(rounds=rounds)
+        if args.full:
+            print("# Fig 7 — quasi-ring")
+            fig7_tau2.run(rounds=rounds, topology="quasi")
+            print("# Fig 7 — cifar-shaped")
+            fig7_tau2.run(rounds=rounds, flavor="cifar")
+    if want("fig8"):
+        print("# Fig 8 — effect of tau1")
+        fig8_tau1.run(rounds=rounds)
+    if want("fig9"):
+        print("# Fig 9 — effect of zeta")
+        fig9_zeta.run(rounds=rounds)
+    if want("fig10"):
+        print("# Fig 10 — C-DFL compression")
+        fig10_cdfl.run(rounds=rounds)
+    if want("table1"):
+        print("# Table I — method comparison")
+        table1_methods.run(budget_iters=480 if not args.full else 1200)
+    if want("theory"):
+        print("# Theory — Proposition 1 bound verification")
+        from benchmarks import theory_check
+        theory_check.main()
+    if want("balance"):
+        print("# Balance — communication vs computing cost optimum")
+        bench_balance.run(rounds=max(30, rounds // 2))
+    if want("roofline"):
+        print("# Roofline (from dry-run artifacts, if present)")
+        try:
+            roofline_report.summarize("1pod")
+        except Exception as e:
+            print(f"(no dry-run artifacts: {e})")
+    print(f"\n# total bench wall-clock: {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""C-DFL compression sweep: accuracy-vs-bytes frontier (paper Fig. 10).
+
+    PYTHONPATH=src python examples/compression_sweep.py
+
+For each compression operator, trains the paper's CNN with C-DFL on the
+10-node ring and prints the loss reached per GB of gossip traffic — the
+communication-efficiency frontier the paper's wall-clock plot captures.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import RunSpec, run_dfl_cnn
+
+VARIANTS = [
+    ("uncompressed DFL", "", {}),
+    ("top_k frac=0.5", "top_k", {"frac": 0.5}),
+    ("rand_k frac=0.5", "rand_k", {"frac": 0.5}),
+    ("qsgd s=16", "qsgd", {"levels": 16}),
+    ("rand_gossip p=0.7", "rand_gossip", {"p": 0.7}),
+]
+
+print(f"{'variant':22s} {'loss':>8s} {'acc':>7s} {'GB sent':>8s} "
+      f"{'loss/GB frontier':>16s}")
+for label, comp, kw in VARIANTS:
+    spec = RunSpec(name=f"sweep-{comp or 'none'}", tau1=4, tau2=4,
+                   topology="ring", compression=comp, comp_kwargs=kw,
+                   gamma=1.0 if not comp else 0.6, rounds=15)
+    out = run_dfl_cnn(spec, log_every=5)
+    h = out["history"]
+    gb = h["gbits"][-1] / 8
+    print(f"{label:22s} {h['loss'][-1]:8.4f} {h['test_acc'][-1]:7.3f} "
+          f"{gb:8.2f} {h['loss'][-1]/max(gb,1e-9):16.4f}")

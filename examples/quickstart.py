@@ -1,0 +1,63 @@
+"""Quickstart: DFL in ~60 lines.
+
+Ten nodes on a ring learn a shared linear model from non-IID data with
+tau1 local SGD steps and tau2 gossip steps per round — the paper's
+Algorithm 1 — then the same problem with compressed gossip (C-DFL, Alg. 2).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (DFLConfig, average_model, init_state, make_compressor,
+                        make_round_fn, ring)
+from repro.optim import sgd
+
+N = 10                       # nodes (paper Sec. VI-A)
+DIM = 32
+KEY = jax.random.key(0)
+
+# --- non-IID linear regression: each node sees a biased slice -------------
+true_w = jax.random.normal(jax.random.fold_in(KEY, 1), (DIM,))
+node_bias = jnp.linspace(-1.0, 1.0, N)
+
+
+def make_batches(key, tau1, batch=16):
+    kx, kn = jax.random.split(key)
+    x = jax.random.normal(kx, (tau1, N, batch, DIM))
+    x = x + node_bias[None, :, None, None]          # feature shift per node
+    y = x @ true_w + 0.05 * jax.random.normal(kn, (tau1, N, batch))
+    return {"x": x, "y": y}
+
+
+def loss_fn(params, batch, key=None):
+    pred = batch["x"] @ params["w"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def train(cfg, rounds=60, label=""):
+    opt = sgd(0.01)
+    state = init_state({"w": jnp.zeros((DIM,))}, N, opt,
+                       jax.random.key(1), compressed=cfg.is_compressed)
+    round_fn = jax.jit(make_round_fn(cfg, loss_fn, opt))
+    key = jax.random.key(2)
+    for r in range(rounds):
+        key, sub = jax.random.split(key)
+        state, metrics = round_fn(state, make_batches(sub, cfg.tau1))
+    avg = average_model(state.params)
+    err = float(jnp.linalg.norm(avg["w"] - true_w))
+    print(f"{label:28s} loss={float(metrics['loss']):.4f} "
+          f"consensus={float(metrics['consensus_sq']):.2e} "
+          f"|w-w*|={err:.4f}")
+    return err
+
+
+print(f"{N}-node ring, zeta={ring(N).zeta:.3f}\n")
+train(DFLConfig(tau1=4, tau2=1, topology=ring(N)), label="C-SGD (tau2=1)")
+train(DFLConfig(tau1=4, tau2=4, topology=ring(N)), label="DFL   (tau2=4)")
+train(DFLConfig(tau1=4, tau2=4, topology=ring(N),
+                compression=make_compressor("qsgd"), gamma=0.5),
+      label="C-DFL (qsgd)")

@@ -1,0 +1,74 @@
+"""End-to-end driver: DFL-train a ~100M-parameter qwen3-style LM for a few
+hundred rounds on the synthetic non-IID corpus.
+
+    PYTHONPATH=src python examples/train_lm.py --rounds 300   # full run
+    PYTHONPATH=src python examples/train_lm.py --rounds 20    # quick look
+
+Uses the public API end to end: ModelConfig -> init_params -> DFLConfig ->
+make_round_fn -> checkpointing. Loss should fall from ~ln(V) toward the
+corpus entropy.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint
+from repro.core import DFLConfig, init_state, make_round_fn, ring
+from repro.data.lm import SyntheticLM, lm_batches_for_dfl
+from repro.models import ModelConfig, init_params, train_loss
+from repro.optim import adamw, warmup_cosine
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds", type=int, default=300)
+ap.add_argument("--nodes", type=int, default=4)
+ap.add_argument("--tau1", type=int, default=4)
+ap.add_argument("--tau2", type=int, default=2)
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--seq", type=int, default=256)
+ap.add_argument("--ckpt", default="")
+args = ap.parse_args()
+
+# ~100M params: 12L, d=768, standard GQA block (qwen3-ish reduced).
+CFG = ModelConfig(
+    name="qwen3-100m", arch_type="dense", num_layers=12, d_model=768,
+    num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32768,
+    qk_norm=True, dtype=jnp.float32, attn_q_chunk=128, attn_kv_chunk=256,
+    loss_seq_chunk=128, remat=False,
+)
+
+params, _ = init_params(CFG, jax.random.key(0))
+n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+print(f"model: {CFG.name}  {n_params/1e6:.1f}M params, "
+      f"{args.nodes} DFL nodes, ring topology")
+
+dcfg = DFLConfig(tau1=args.tau1, tau2=args.tau2, topology=ring(args.nodes))
+total_steps = args.rounds * args.tau1
+opt = adamw(warmup_cosine(3e-4, warmup_steps=total_steps // 20,
+                          total_steps=total_steps))
+corpus = SyntheticLM(vocab_size=CFG.vocab_size, num_nodes=args.nodes,
+                     noniid_alpha=0.5, branching=8)
+
+state = init_state(params, args.nodes, opt, jax.random.key(1))
+round_fn = jax.jit(make_round_fn(
+    dcfg, lambda p, b, k: train_loss(p, b, CFG, k), opt))
+
+t0 = time.time()
+for r in range(args.rounds):
+    batches = lm_batches_for_dfl(corpus, args.tau1, args.nodes, args.batch,
+                                 args.seq, r)
+    state, m = round_fn(state, batches)
+    if (r + 1) % max(1, args.rounds // 50) == 0 or r == 0:
+        dt = time.time() - t0
+        toks = (r + 1) * args.tau1 * args.nodes * args.batch * args.seq
+        print(f"round {r+1:4d}/{args.rounds} loss={float(m['loss']):.4f} "
+              f"consensus={float(m['consensus_sq']):.2e} "
+              f"{toks/dt:.0f} tok/s", flush=True)
+    if args.ckpt and (r + 1) % 100 == 0:
+        save_checkpoint(args.ckpt, r + 1, state.params,
+                        {"loss": float(m["loss"])})
+print(f"trained {args.rounds} rounds in {time.time()-t0:.0f}s")

@@ -1,0 +1,4 @@
+"""Pytree checkpointing (npz-based, with a JSON manifest)."""
+from repro.checkpoint.io import save_checkpoint, restore_checkpoint, latest_step
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]

@@ -1,0 +1,79 @@
+"""Minimal, dependency-free pytree checkpointing.
+
+Leaves are flattened to a single .npz (keyed by the joined tree path); a
+sidecar manifest.json records step, metrics and the treedef os the pytree
+can be restored into the same structure.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _key_of(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree,
+                    metrics: Optional[Dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {_key_of(p): np.asarray(v) for p, v in flat}
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    np.savez(path, **arrays)
+    manifest = {
+        "step": step,
+        "metrics": metrics or {},
+        "num_leaves": len(arrays),
+    }
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for fn in os.listdir(directory)
+        if (m := re.match(r"ckpt_(\d+)\.npz$", fn))
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, template: PyTree,
+                       step: Optional[int] = None) -> Tuple[PyTree, int]:
+    """Restore into the structure of ``template`` (shapes are validated)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, tmpl in flat:
+        key = _key_of(path)
+        arr = data[key]
+        if hasattr(tmpl, "shape") and tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"template {tmpl.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,53 @@
+"""Core DFL library: the paper's contribution as composable JAX modules."""
+from repro.core.topology import (
+    Topology,
+    ring,
+    quasi_ring,
+    paper_quasi_ring,
+    fully_connected,
+    disconnected,
+    torus,
+    hypercube,
+    star,
+    from_adjacency,
+    zeta,
+    beta,
+    spectral_gap,
+)
+from repro.core.compression import (
+    Compressor,
+    Identity,
+    TopK,
+    RandK,
+    QSGD,
+    RandomizedGossip,
+    make_compressor,
+    compress_tree,
+    tree_wire_bits,
+)
+from repro.core.dfl import (
+    DFLConfig,
+    DFLState,
+    d_sgd_config,
+    c_sgd_config,
+    sync_sgd_config,
+    replicate,
+    average_model,
+    consensus_distance,
+    init_state,
+    make_round_fn,
+    round_wire_bits,
+)
+from repro.core import mixing, metrics
+
+__all__ = [
+    "Topology", "ring", "quasi_ring", "paper_quasi_ring", "fully_connected", "disconnected",
+    "torus", "hypercube", "star", "from_adjacency", "zeta", "beta",
+    "spectral_gap",
+    "Compressor", "Identity", "TopK", "RandK", "QSGD", "RandomizedGossip",
+    "make_compressor", "compress_tree", "tree_wire_bits",
+    "DFLConfig", "DFLState", "d_sgd_config", "c_sgd_config",
+    "sync_sgd_config", "replicate", "average_model", "consensus_distance",
+    "init_state", "make_round_fn", "round_wire_bits",
+    "mixing", "metrics",
+]

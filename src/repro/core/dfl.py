@@ -1,0 +1,316 @@
+"""The DFL / C-DFL algorithm engine (paper Algorithms 1 and 2).
+
+A *round* is tau1 local SGD steps followed by tau2 gossip steps:
+
+    local update (t in [k]_1):   X_{t+1} = X_t - eta G_t          (Alg. 1 l.4)
+    communication (t in [k]_2):  X_{t+1} = X_t C                  (Alg. 1 l.6)
+
+With compression (C-DFL, Alg. 2), the communication sub-round becomes the
+CHOCO-G error-feedback iteration over the shared estimates Y = [w_hat^(i)]:
+
+    X <- X + gamma * Y (C - I)                                    (Alg. 2 l.6)
+    q  = Q(X - Y)                                                 (Alg. 2 l.7)
+    Y <- Y + q                                                    (Alg. 2 l.11)
+
+Every parameter leaf carries a leading node dimension of size N. The engine
+is pure JAX (jit/vmap/scan) and device-layout agnostic: distribution is
+decided by the caller via shardings on the stacked arrays (see
+``repro.launch.train``) or by wrapping in ``shard_map`` (sparse mixing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mixing as mixing_lib
+from repro.core.compression import Compressor, compress_tree
+from repro.core.topology import Topology
+
+PyTree = Any
+LossFn = Callable[[PyTree, PyTree, jax.Array], jnp.ndarray]
+
+__all__ = [
+    "DFLConfig",
+    "DFLState",
+    "d_sgd_config",
+    "c_sgd_config",
+    "sync_sgd_config",
+    "replicate",
+    "average_model",
+    "consensus_distance",
+    "init_state",
+    "make_round_fn",
+    "round_wire_bits",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DFLConfig:
+    """Hyper-parameters of one DFL instance.
+
+    tau1: computation frequency (local update steps per round).
+    tau2: communication frequency (gossip steps per round).
+    topology: gossip graph / confusion matrix C.
+    mixing_impl: 'dense'       — X C per step (paper-faithful baseline);
+                 'dense_power' — X C^{tau2} collapsed into one contraction
+                                 (uncompressed DFL only; beyond-paper opt);
+                 handled sparsely by the launcher when C is circulant.
+    compression: None for plain DFL; a Compressor for C-DFL.
+    gamma: CHOCO consensus step size (paper uses 1.0 in Fig. 10).
+    """
+
+    tau1: int
+    tau2: int
+    topology: Topology
+    mixing_impl: str = "dense"
+    compression: Optional[Compressor] = None
+    gamma: float = 1.0
+    # optional time-varying topologies: round k uses
+    # topology_schedule[k % len] (beyond-paper extension; e.g. alternating
+    # ring orientations or random matchings — the theory's zeta becomes the
+    # schedule's joint spectral quantity).
+    topology_schedule: Tuple[Topology, ...] = ()
+
+    def __post_init__(self):
+        assert self.tau1 >= 1 and self.tau2 >= 0
+        if self.compression is not None and self.mixing_impl == "dense_power":
+            raise ValueError(
+                "C-DFL interleaves compression with every gossip step; "
+                "dense_power mixing is only valid for uncompressed DFL"
+            )
+
+    @property
+    def tau(self) -> int:
+        return self.tau1 + self.tau2
+
+    @property
+    def is_compressed(self) -> bool:
+        return self.compression is not None
+
+
+def d_sgd_config(topology: Topology, **kw) -> DFLConfig:
+    """D-SGD special case: (tau1, tau2) = (1, 1)  [paper Sec. III-C1]."""
+    return DFLConfig(tau1=1, tau2=1, topology=topology, **kw)
+
+
+def c_sgd_config(tau: int, topology: Topology, **kw) -> DFLConfig:
+    """C-SGD special case: (tau1, tau2) = (tau, 1)  [paper Sec. III-C2]."""
+    return DFLConfig(tau1=tau, tau2=1, topology=topology, **kw)
+
+
+def sync_sgd_config(num_nodes: int, tau1: int = 1, **kw) -> DFLConfig:
+    """Synchronous SGD benchmark: C = J (zeta = 0)  [paper Corollary 1/2]."""
+    from repro.core.topology import fully_connected
+
+    return DFLConfig(tau1=tau1, tau2=1, topology=fully_connected(num_nodes), **kw)
+
+
+class DFLState(NamedTuple):
+    """Stacked per-node training state."""
+
+    params: PyTree        # every leaf [N, ...]
+    opt_state: PyTree     # every leaf [N, ...] (optimizer slots per node)
+    hat_params: PyTree    # CHOCO shared estimates Y (None for plain DFL)
+    rng: jax.Array        # base PRNG key, folded per step/node
+    round_idx: jnp.ndarray  # scalar int32
+
+
+def replicate(tree: PyTree, n: int) -> PyTree:
+    """Stack n identical copies along a new leading node axis (the paper
+    initializes all nodes at the same point, Sec. VI-A)."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), tree
+    )
+
+
+def average_model(params: PyTree) -> PyTree:
+    """u_t = X_t 1/N (the paper's average model)."""
+    return jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), params)
+
+
+def consensus_distance(params: PyTree) -> jnp.ndarray:
+    """||X (I - J)||_F^2 / N — the local-drift quantity of Lemma 1."""
+    total = 0.0
+    n = None
+    for leaf in jax.tree_util.tree_leaves(params):
+        n = leaf.shape[0]
+        mean = jnp.mean(leaf, axis=0, keepdims=True)
+        total = total + jnp.sum((leaf.astype(jnp.float32) - mean) ** 2)
+    assert n is not None
+    return total / n
+
+
+def init_state(
+    params: PyTree, n: int, opt, rng: jax.Array, stacked: bool = False,
+    compressed: bool = False,
+) -> DFLState:
+    """Build the stacked state from single-model params (or pre-stacked).
+
+    ``compressed=True`` allocates the CHOCO shared-estimate tree (Alg. 2
+    l.1 initializes w_hat = 0); plain DFL carries None and pays no memory.
+    """
+    stacked_params = params if stacked else replicate(params, n)
+    opt_state = jax.vmap(opt.init)(stacked_params)
+    hat = (jax.tree_util.tree_map(jnp.zeros_like, stacked_params)
+           if compressed else None)
+    return DFLState(
+        params=stacked_params,
+        opt_state=opt_state,
+        hat_params=hat,
+        rng=rng,
+        round_idx=jnp.zeros((), jnp.int32),
+    )
+
+
+def _local_updates(
+    cfg: DFLConfig, loss_fn: LossFn, opt, state: DFLState, batches: PyTree,
+    constrain=None,
+) -> Tuple[DFLState, jnp.ndarray]:
+    """tau1 per-node SGD steps; batches leaves are [tau1, N, ...].
+
+    ``constrain`` (optional) re-asserts the stacked-parameter sharding on
+    grads and updated params each step: without it GSPMD may resolve the
+    scan carry / vmapped-grad shardings to replicated and all-gather entire
+    stacked weight trees (observed: 200 GiB/device on phi3.5-moe).
+    """
+    constrain = constrain or (lambda t: t)
+
+    def loss_one(params_i, batch_i, key_i):
+        return loss_fn(params_i, batch_i, key_i)
+
+    grad_one = jax.value_and_grad(loss_one)
+
+    def step(carry, inp):
+        params, opt_state, rng = carry
+        batch_t, t = inp
+        rng, sub = jax.random.split(rng)
+        n = jax.tree_util.tree_leaves(params)[0].shape[0]
+        keys = jax.random.split(sub, n)
+        losses, grads = jax.vmap(grad_one)(params, batch_t, keys)
+        grads = constrain(grads)
+        updates, opt_state = jax.vmap(opt.update)(grads, opt_state, params)
+        params = jax.tree_util.tree_map(
+            lambda p, u: (p + u).astype(p.dtype), params, updates)
+        params = constrain(params)
+        return (params, opt_state, rng), jnp.mean(losses)
+
+    (params, opt_state, rng), losses = jax.lax.scan(
+        step,
+        (state.params, state.opt_state, state.rng),
+        (batches, jnp.arange(cfg.tau1)),
+    )
+    new_state = state._replace(params=params, opt_state=opt_state, rng=rng)
+    return new_state, jnp.mean(losses)
+
+
+def _communicate_plain(cfg: DFLConfig, params: PyTree,
+                       round_idx=None) -> PyTree:
+    """tau2 uncompressed gossip steps (optionally round-varying topology)."""
+    if cfg.tau2 == 0:
+        return params
+    if cfg.topology_schedule:
+        assert cfg.mixing_impl == "dense", (
+            "topology schedules use dense mixing")
+        branches = [
+            (lambda p, t=t: jax.lax.fori_loop(
+                0, cfg.tau2, lambda _, q: mixing_lib.mix_dense(q, t), p))
+            for t in cfg.topology_schedule
+        ]
+        sel = (round_idx if round_idx is not None
+               else jnp.zeros((), jnp.int32)) % len(branches)
+        return jax.lax.switch(sel, branches, params)
+    if cfg.mixing_impl == "dense_power":
+        return mixing_lib.mix_dense_power(params, cfg.topology, cfg.tau2)
+    if cfg.mixing_impl != "dense":
+        raise ValueError(f"unknown mixing_impl {cfg.mixing_impl!r}")
+
+    def body(_, p):
+        return mixing_lib.mix_dense(p, cfg.topology)
+
+    return jax.lax.fori_loop(0, cfg.tau2, body, params)
+
+
+def _communicate_choco(
+    cfg: DFLConfig, params: PyTree, hat: PyTree, rng: jax.Array
+) -> Tuple[PyTree, PyTree]:
+    """tau2 CHOCO-G compressed gossip steps (Alg. 2 lines 6-11)."""
+    comp = cfg.compression
+    assert comp is not None
+    c_minus_i = cfg.topology.mixing - np.eye(cfg.topology.num_nodes)
+    gamma = cfg.gamma
+
+    def one_step(carry, t):
+        x, y = carry
+
+        def move_leaf(x_leaf, y_leaf):
+            cm = jnp.asarray(c_minus_i, dtype=jnp.float32)
+            delta = jnp.einsum("ji,j...->i...", cm, y_leaf.astype(jnp.float32))
+            return (x_leaf.astype(jnp.float32) + gamma * delta).astype(x_leaf.dtype)
+
+        x_new = jax.tree_util.tree_map(move_leaf, x, y)
+        step_key = jax.random.fold_in(rng, t)
+        # Q applied per node (independent randomness per node).
+        n = jax.tree_util.tree_leaves(x_new)[0].shape[0]
+        node_keys = jax.random.split(step_key, n)
+        diff = jax.tree_util.tree_map(lambda a, b: a - b, x_new, y)
+        q = jax.vmap(lambda d, k: compress_tree(comp, d, k))(diff, node_keys)
+        y_new = jax.tree_util.tree_map(lambda b, qq: b + qq, y, q)
+        return (x_new, y_new), None
+
+    (params, hat), _ = jax.lax.scan(
+        one_step, (params, hat), jnp.arange(cfg.tau2)
+    )
+    return params, hat
+
+
+def make_round_fn(
+    cfg: DFLConfig, loss_fn: LossFn, opt, constrain=None
+) -> Callable[[DFLState, PyTree], Tuple[DFLState, dict]]:
+    """Build the jittable one-round function.
+
+    round_fn(state, batches) -> (state', metrics); batches leaves
+    [tau1, N, local_batch...]. ``constrain``: optional params-tree sharding
+    re-assertion (see _local_updates).
+    """
+
+    def round_fn(state: DFLState, batches: PyTree):
+        state, mean_loss = _local_updates(cfg, loss_fn, opt, state, batches,
+                                          constrain)
+        if cfg.is_compressed:
+            assert state.hat_params is not None, (
+                "C-DFL needs init_state(..., compressed=True)")
+            rng, sub = jax.random.split(state.rng)
+            params, hat = _communicate_choco(cfg, state.params, state.hat_params, sub)
+            state = state._replace(params=params, hat_params=hat, rng=rng)
+        else:
+            params = _communicate_plain(cfg, state.params, state.round_idx)
+            if constrain is not None:
+                params = constrain(params)
+            state = state._replace(params=params)
+        state = state._replace(round_idx=state.round_idx + 1)
+        metrics = {
+            "loss": mean_loss,
+            "consensus_sq": consensus_distance(state.params),
+        }
+        return state, metrics
+
+    return round_fn
+
+
+def round_wire_bits(cfg: DFLConfig, params_one_node: PyTree) -> float:
+    """Analytic wire bits per node per ROUND (tau2 gossip steps).
+
+    Uncompressed: each gossip step ships the full fp32 model to each
+    neighbor; compressed: Q's bits_per_value. Used by the Fig.-10-style
+    wall-clock-per-bit benchmarks.
+    """
+    from repro.core.compression import Identity, tree_wire_bits
+
+    comp = cfg.compression if cfg.is_compressed else Identity()
+    deg = cfg.topology.max_degree
+    per_step = tree_wire_bits(comp, params_one_node) * deg
+    return per_step * cfg.tau2

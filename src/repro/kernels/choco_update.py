@@ -1,0 +1,46 @@
+"""Fused CHOCO-G consensus move — Pallas TPU kernel.
+
+C-DFL's inner communication step (Alg. 2 lines 6-7) per node i:
+
+    x_new = x + gamma * (mixed_y - y)      # mixed_y = sum_j c_ji y_j
+    d     = x_new - y                      # the tensor Q compresses next
+
+Unfused: 3 reads + 2 intermediate writes over the model; the kernel emits
+both outputs in a single VMEM pass. gamma arrives as a (1,1) scalar tile.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+LANES = 128
+
+
+def _choco_kernel(gamma_ref, x_ref, y_ref, my_ref, xout_ref, dout_ref):
+    gamma = gamma_ref[0, 0]
+    x = x_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    my = my_ref[...].astype(jnp.float32)
+    x_new = x + gamma * (my - y)
+    xout_ref[...] = x_new.astype(xout_ref.dtype)
+    dout_ref[...] = (x_new - y).astype(dout_ref.dtype)
+
+
+def choco_move_2d(x2d: jnp.ndarray, y2d: jnp.ndarray, mixed_y2d: jnp.ndarray,
+                  gamma: jnp.ndarray, *, interpret: bool = False):
+    """Returns (x_new, d); all operands (rows, 128), gamma (1,1)."""
+    rows, lanes = x2d.shape
+    assert lanes == LANES and rows % BLOCK_ROWS == 0, x2d.shape
+    grid = (rows // BLOCK_ROWS,)
+    blk = pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        _choco_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)), blk, blk, blk],
+        out_specs=(blk, blk),
+        out_shape=(jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
+                   jax.ShapeDtypeStruct(x2d.shape, x2d.dtype)),
+        interpret=interpret,
+    )(gamma, x2d, y2d, mixed_y2d)

@@ -1,0 +1,76 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handle arbitrary-shaped inputs: flatten, pad to the (BLOCK_ROWS x 128)
+tile grid, run the kernel, unpad. ``interpret=True`` (the CPU default
+here) executes the kernel body in Python for validation; on TPU the same
+call sites compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import choco_update as _choco
+from repro.kernels import gossip_mix as _mix
+from repro.kernels import qsgd as _qsgd
+
+_TILE = _qsgd.BLOCK_ROWS * _qsgd.LANES
+
+ON_TPU = jax.default_backend() == "tpu"
+
+
+def _to_2d(x: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
+    flat = x.reshape(-1)
+    n = flat.size
+    pad = (-n) % _TILE
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, _qsgd.LANES), n
+
+
+def _from_2d(x2d: jnp.ndarray, n: int, shape, dtype) -> jnp.ndarray:
+    return x2d.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "interpret"))
+def qsgd_quantize(x: jnp.ndarray, noise: jnp.ndarray, *, levels: int = 16,
+                  interpret: bool = not ON_TPU) -> jnp.ndarray:
+    """QSGD with delta = 1/c, c = 1 + min(d/s^2, sqrt(d)/s)."""
+    d = x.size
+    s = float(levels)
+    c = 1.0 + min(d / (s * s), (d ** 0.5) / s)
+    x2d, n = _to_2d(x)
+    n2d, _ = _to_2d(noise)
+    norm = jnp.linalg.norm(x.reshape(-1).astype(jnp.float32)).reshape(1, 1)
+    out = _qsgd.qsgd_quantize_2d(x2d, n2d, norm, levels=levels, c=c,
+                                 interpret=interpret)
+    return _from_2d(out, n, x.shape, x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gossip_mix(x: jnp.ndarray, neighbors: jnp.ndarray, weights: jnp.ndarray,
+               *, interpret: bool = not ON_TPU) -> jnp.ndarray:
+    """out = weights[0]*x + sum_j weights[1+j]*neighbors[j]."""
+    deg = neighbors.shape[0]
+    x2d, n = _to_2d(x)
+    nbr2d = jax.vmap(lambda t: _to_2d(t)[0])(
+        neighbors.reshape(deg, -1))
+    w = weights.reshape(1, deg + 1).astype(jnp.float32)
+    out = _mix.gossip_mix_2d(x2d, nbr2d, w, interpret=interpret)
+    return _from_2d(out, n, x.shape, x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def choco_move(x: jnp.ndarray, y: jnp.ndarray, mixed_y: jnp.ndarray,
+               gamma: float, *, interpret: bool = not ON_TPU):
+    """Fused CHOCO step: returns (x_new, d = x_new - y)."""
+    x2d, n = _to_2d(x)
+    y2d, _ = _to_2d(y)
+    my2d, _ = _to_2d(mixed_y)
+    g = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+    xo, do = _choco.choco_move_2d(x2d, y2d, my2d, g, interpret=interpret)
+    return (_from_2d(xo, n, x.shape, x.dtype),
+            _from_2d(do, n, x.shape, x.dtype))

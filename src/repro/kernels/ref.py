@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels (the source of truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qsgd_ref(x: jnp.ndarray, noise: jnp.ndarray, *, levels: int,
+             c: float) -> jnp.ndarray:
+    """Matches repro.core.compression.QSGD with explicit noise."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    s = float(levels)
+    norm = jnp.linalg.norm(flat)
+    safe = jnp.where(norm > 0, norm, 1.0)
+    lvl = jnp.floor(s * jnp.abs(flat) / safe + noise.reshape(-1))
+    q = jnp.sign(flat) * safe * lvl / (s * c)
+    q = jnp.where(norm > 0, q, 0.0)
+    return q.reshape(x.shape).astype(x.dtype)
+
+
+def gossip_mix_ref(x: jnp.ndarray, neighbors: jnp.ndarray,
+                   weights: jnp.ndarray) -> jnp.ndarray:
+    """weights [deg+1]: [self, n_1 ... n_deg]; neighbors [deg, *x.shape]."""
+    acc = weights[0] * x.astype(jnp.float32)
+    for j in range(neighbors.shape[0]):
+        acc = acc + weights[j + 1] * neighbors[j].astype(jnp.float32)
+    return acc.astype(x.dtype)
+
+
+def choco_move_ref(x: jnp.ndarray, y: jnp.ndarray, mixed_y: jnp.ndarray,
+                   gamma: float):
+    x32, y32, my32 = (t.astype(jnp.float32) for t in (x, y, mixed_y))
+    x_new = x32 + gamma * (my32 - y32)
+    return x_new.astype(x.dtype), (x_new - y32).astype(x.dtype)

@@ -1,0 +1,154 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+MUST be the process entrypoint (sets the fake-device flag before any other
+import, including jax):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+
+Per combination it records memory_analysis, cost_analysis, and the parsed
+collective schedule into a JSON file that benchmarks/roofline.py renders
+into EXPERIMENTS.md tables.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+
+def run_one(arch_id: str, shape_name: str, multi_pod: bool, *,
+            kinds=("headline",), mixing: str = "dense",
+            tau1: int = 4, tau2: int = 4, compression: str = "",
+            out_dir: str = "", tag: str = "") -> dict:
+    from repro.configs import get_arch
+    from repro.configs.base import SHAPES
+    from repro.core.compression import make_compressor
+    from repro.launch import roofline as roof_lib
+    from repro.launch import steps as steps_lib
+    from repro.launch.mesh import make_production_mesh
+
+    arch = get_arch(arch_id)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(len(mesh.devices.flatten()))
+    comp = make_compressor(compression) if compression else None
+    results = {}
+    for kind in kinds:
+        t0 = time.time()
+        try:
+            if kind == "headline":
+                built = steps_lib.build_for(
+                    arch, shape_name, mesh, tau1=tau1, tau2=tau2,
+                    mixing_impl=mixing, compression=comp,
+                ) if SHAPES[shape_name].kind == "train" else steps_lib.build_for(
+                    arch, shape_name, mesh)
+            elif kind == "local":
+                built = steps_lib.build_local_step(arch, shape_name, mesh)
+            elif kind == "gossip":
+                built = steps_lib.build_gossip_step(
+                    arch, mesh, mixing_impl=mixing, compression=comp)
+            else:
+                raise ValueError(kind)
+            lowered = built.lower()
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            rec = roof_lib.analyze_compiled(compiled, chips)
+            if out_dir and os.environ.get("DRYRUN_DUMP_HLO", "1") == "1":
+                pod_s = "2pod" if multi_pod else "1pod"
+                hdir = os.path.join(out_dir, "hlo")
+                os.makedirs(hdir, exist_ok=True)
+                hname = f"{arch_id}__{shape_name}__{pod_s}__{kind}"
+                if tag:
+                    hname += f"__{tag}"
+                with open(os.path.join(hdir, hname + ".hlo"), "w") as hf:
+                    hf.write(compiled.as_text())
+            rec.update(built.meta)
+            rec.update({
+                "ok": True, "lower_s": round(t_lower, 1),
+                "compile_s": round(t_compile, 1), "chips": chips,
+                "multi_pod": multi_pod,
+            })
+            # free compile artifacts eagerly (big HLO texts).
+            del compiled, lowered, built
+        except Exception as e:
+            rec = {
+                "ok": False, "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:],
+                "kind": kind, "arch": arch_id, "shape": shape_name,
+                "multi_pod": multi_pod,
+            }
+        results[kind] = rec
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        pod = "2pod" if multi_pod else "1pod"
+        name = f"{arch_id}__{shape_name}__{pod}"
+        if tag:
+            name += f"__{tag}"
+        with open(os.path.join(out_dir, name + ".json"), "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every runnable (arch x shape) on this mesh")
+    ap.add_argument("--kinds", default="headline",
+                    help="comma list: headline,local,gossip")
+    ap.add_argument("--mixing", default="dense",
+                    choices=["dense", "dense_power"])
+    ap.add_argument("--compression", default="")
+    ap.add_argument("--tau1", type=int, default=4)
+    ap.add_argument("--tau2", type=int, default=4)
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    from repro.configs import REGISTRY, get_arch
+
+    kinds = tuple(args.kinds.split(","))
+    combos = []
+    if args.all:
+        for aid, arch in sorted(REGISTRY.items()):
+            for shape in arch.shapes():
+                combos.append((aid, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos.append((args.arch, args.shape))
+
+    n_ok = n_fail = 0
+    for aid, shape in combos:
+        res = run_one(aid, shape, args.multi_pod, kinds=kinds,
+                      mixing=args.mixing, tau1=args.tau1, tau2=args.tau2,
+                      compression=args.compression, out_dir=args.out,
+                      tag=args.tag)
+        for kind, rec in res.items():
+            if rec.get("ok"):
+                n_ok += 1
+                roof = rec.get("roofline", {})
+                print(f"OK   {aid:26s} {shape:12s} {kind:8s} "
+                      f"compile={rec['compile_s']:.0f}s "
+                      f"dom={roof.get('dominant','?'):10s} "
+                      f"flops={roof.get('flops',0):.3g}", flush=True)
+            else:
+                n_fail += 1
+                print(f"FAIL {aid:26s} {shape:12s} {kind:8s} "
+                      f"{rec['error']}", flush=True)
+    print(f"\n{n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

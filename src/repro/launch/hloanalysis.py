@@ -1,0 +1,327 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, which
+undercounts every ``lax.scan``-structured model (layer stacks, attention
+chunk scans, mamba chunk scans, the tau1/tau2 DFL loops) by the trip
+count. This module re-derives flops / bytes / collective-bytes from the
+optimized HLO text, multiplying loop bodies by their
+``backend_config={"known_trip_count":{"n":...}}`` annotation (present for
+all lax.scan/fori loops after XLA's loop analysis).
+
+Accounting model (documented, deliberately simple):
+  * flops: 2 * prod(result_shape) * prod(lhs contracting dims) per `dot`
+    (convolutions ignored — none in the production models); recursion into
+    fusions / called computations / while bodies (x trip count).
+  * bytes: per *scheduled* instruction (i.e. NOT inside fusion bodies),
+    2 x result bytes (one write + one read by the consumer), excluding pure
+    bookkeeping ops (parameter/constant/tuple/get-tuple-element/bitcast);
+    recursion as above. Counting full operand bytes per consumer was tried
+    first and overcounts shared operands (a gathered weight read by k
+    consumers billed k times) by 3-20x; the 2x-result model matches XLA's
+    own per-dot accounting within ~1.5x on calibration cases.
+  * collective bytes: result bytes per collective instruction (tuple
+    results halved for async (in, out) pairs), x enclosing trip counts.
+
+Validation: tests/test_hloanalysis.py checks a 7-iteration scanned matmul
+reports exactly 7x the flops of the unrolled cost, and that the corrected
+flops of an unrolled model match cost_analysis within a few %.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_SINGLE_SHAPE_RE = re.compile(r"([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)")
+_OPCODE_RE = re.compile(r"([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\s*\{")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_BOOKKEEPING = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    """All (dtype, dims) components of a (possibly tuple) shape string."""
+    return [
+        (m.group(1), [int(d) for d in m.group(2).split(",")] if m.group(2)
+         else [])
+        for m in _SHAPE_RE.finditer(shape_str)
+    ]
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    shape: str
+    opcode: str
+    line: str
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+
+
+def _parse_instr_line(line: str):
+    """Balanced-paren instruction parser (regex fails on nested tuple
+    shapes like while-carry tuples, silently dropping the layer scans)."""
+    st = line.strip()
+    if st.startswith("ROOT "):
+        st = st[5:]
+    if not st.startswith("%"):
+        return None
+    eq = st.find(" = ")
+    if eq < 0:
+        return None
+    name = st[1:eq]
+    rest = st[eq + 3:]
+    if rest.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        shape = rest[:end + 1]
+        rest2 = rest[end + 1:].lstrip()
+    else:
+        m = _SINGLE_SHAPE_RE.match(rest)
+        if not m:
+            return None
+        shape = m.group(1)
+        rest2 = rest[m.end():].lstrip()
+    m = _OPCODE_RE.match(rest2)
+    if not m:
+        return None
+    return name, shape, m.group(1)
+
+
+def _parse_operands(line: str, opcode: str) -> List[str]:
+    start = line.index(opcode + "(") + len(opcode) + 1
+    depth = 1
+    i = start
+    while i < len(line) and depth:
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+        i += 1
+    args = line[start:i - 1]
+    return re.findall(r"%([\w.\-]+)", args)
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        m = _COMP_RE.match(line)
+        if m and " = " not in line:
+            cur = Computation(name=m.group(2), instructions=[])
+            comps[cur.name] = cur
+            if m.group(1):
+                entry = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_instr_line(line)
+        if parsed is None:
+            continue
+        name, shape, opcode = parsed
+        try:
+            operands = _parse_operands(line, opcode)
+        except ValueError:
+            operands = []
+        cur.instructions.append(Instruction(name, shape, opcode, line,
+                                            operands))
+    return comps, entry
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    unknown_trip_loops: int = 0
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k in _COLLECTIVES:
+            self.coll_bytes[k] += other.coll_bytes[k]
+        self.unknown_trip_loops += other.unknown_trip_loops
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k,
+                    {n: v * k for n, v in self.coll_bytes.items()},
+                    self.unknown_trip_loops)
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def _dot_flops(instr: Instruction, shapes: Dict[str, str]) -> float:
+    result = _shape_dims(instr.shape)
+    out_elems = 1
+    for _, dims in result:
+        for d in dims:
+            out_elems *= d
+    mc = _LHS_CONTRACT_RE.search(instr.line)
+    k = 1
+    if mc and instr.operands:
+        lhs_shape = shapes.get(instr.operands[0], "")
+        lhs_dims_all = _shape_dims(lhs_shape)
+        if lhs_dims_all:
+            lhs_dims = lhs_dims_all[0][1]
+            for idx in (int(x) for x in mc.group(1).split(",") if x):
+                if idx < len(lhs_dims):
+                    k *= lhs_dims[idx]
+    return 2.0 * out_elems * k
+
+
+class HloAnalyzer:
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry = parse_module(hlo_text)
+        # global result-shape table (names are module-unique in practice).
+        self.shapes: Dict[str, str] = {}
+        for comp in self.comps.values():
+            for ins in comp.instructions:
+                self.shapes[ins.name] = ins.shape
+        self._fusion_bodies = set()
+        for comp in self.comps.values():
+            for ins in comp.instructions:
+                if ins.opcode == "fusion":
+                    mc = _CALLS_RE.search(ins.line)
+                    if mc:
+                        self._fusion_bodies.add(mc.group(1))
+        self._memo: Dict[Tuple[str, bool], Cost] = {}
+
+    def computation_cost(self, name: str, fused: bool = False) -> Cost:
+        key = (name, fused)
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = Cost()  # cycle guard
+        comp = self.comps.get(name)
+        total = Cost()
+        if comp is None:
+            return total
+        for ins in comp.instructions:
+            total += self._instruction_cost(ins, fused)
+        self._memo[key] = total
+        return total
+
+    def _instruction_cost(self, ins: Instruction, fused: bool) -> Cost:
+        c = Cost()
+        op = ins.opcode
+        if op == "while":
+            mb = _BODY_RE.search(ins.line)
+            mt = _TRIP_RE.search(ins.line)
+            trip = int(mt.group(1)) if mt else 1
+            if not mt:
+                c.unknown_trip_loops += 1
+            if mb:
+                c += self.computation_cost(mb.group(1)).scaled(trip)
+            return c
+        if op in ("fusion", "call", "custom-call", "conditional",
+                  "async-start", "map", "reduce", "scatter", "sort",
+                  "reduce-window", "select-and-scatter"):
+            for mc in _CALLS_RE.finditer(ins.line):
+                c += self.computation_cost(
+                    mc.group(1), fused=(op == "fusion") or fused)
+            # also to_apply= computations (reduce etc.) are tiny; skip.
+        if op == "dot":
+            c.flops += _dot_flops(ins, self.shapes)
+        clean = op.replace("-start", "").replace("-done", "")
+        if clean in _COLLECTIVES:
+            if "-done(" in ins.line:
+                pass  # counted at -start
+            else:
+                b = _shape_bytes(ins.shape)
+                if ins.shape.startswith("("):
+                    b /= 2.0  # async (in, out) tuples double-count
+                c.coll_bytes[clean] += b
+        if not fused and op not in _BOOKKEEPING and op != "while":
+            rb = _shape_bytes(ins.shape)
+            # in-place accumulator heuristic: a fusion/DUS whose result
+            # shape equals an operand's (loop-carried KV caches, scan
+            # accumulators) aliases that operand in-place — real traffic is
+            # bounded by the OTHER operands (the updated slice), not the
+            # whole buffer (observed 2x516 GB/token phantom traffic on the
+            # stacked decode cache without this).
+            def _elems(sh):
+                n = 0
+                for _, dims in _shape_dims(sh):
+                    e = 1
+                    for d in dims:
+                        e *= d
+                    n += e
+                return n
+
+            res_elems = _elems(ins.shape)
+            op_shapes = [self.shapes.get(o, "") for o in ins.operands]
+            if any(_elems(o) == res_elems and res_elems > 0
+                   for o in op_shapes):
+                others = sum(_shape_bytes(o) for o in op_shapes
+                             if _elems(o) != res_elems)
+                rb = min(rb, others)
+            c.bytes += 2.0 * rb
+        return c
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.computation_cost(self.entry)
+
+
+def analyze_text(hlo_text: str) -> Dict:
+    cost = HloAnalyzer(hlo_text).entry_cost()
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "collective_bytes": cost.total_coll_bytes,
+        "collective_bytes_per_kind": dict(cost.coll_bytes),
+        "unknown_trip_loops": cost.unknown_trip_loops,
+    }

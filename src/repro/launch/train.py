@@ -1,0 +1,129 @@
+"""DFL training CLI (runs for real at reduced scale; lowers-only at full).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \
+        --nodes 4 --tau1 4 --tau2 4 --rounds 20 --batch 4 --seq 128
+
+Full-scale configs on the production mesh are exercised via dryrun.py; this
+driver actually executes on the host devices (CPU here, TPU unchanged).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_arch, list_archs
+from repro.core import (DFLConfig, average_model, init_state,
+                        make_compressor, make_round_fn, ring,
+                        round_wire_bits, fully_connected, paper_quasi_ring)
+from repro.data.lm import SyntheticLM, lm_batches_for_dfl
+from repro.models import train_loss, init_params
+from repro.optim import sgd, momentum_sgd, adamw
+
+
+def make_topology(name: str, n: int):
+    return {
+        "ring": lambda: ring(n),
+        "full": lambda: fully_connected(n),
+        "quasi": lambda: paper_quasi_ring(),
+    }[name]()
+
+
+def make_optimizer(name: str, lr: float):
+    return {
+        "sgd": lambda: sgd(lr),
+        "momentum": lambda: momentum_sgd(lr),
+        "adamw": lambda: adamw(lr),
+    }[name]()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--tau1", type=int, default=4)
+    ap.add_argument("--tau2", type=int, default=4)
+    ap.add_argument("--topology", default="ring",
+                    choices=["ring", "full", "quasi"])
+    ap.add_argument("--compression", default="",
+                    choices=["", "top_k", "rand_k", "qsgd", "rand_gossip"])
+    ap.add_argument("--gamma", type=float, default=0.6)
+    ap.add_argument("--optimizer", default="sgd",
+                    choices=["sgd", "momentum", "adamw"])
+    ap.add_argument("--lr", type=float, default=3e-2)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4, help="per node")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--noniid", type=float, default=0.5)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    cfg = arch.reduced
+    n = args.nodes
+    comp = make_compressor(args.compression) if args.compression else None
+    dcfg = DFLConfig(tau1=args.tau1, tau2=args.tau2,
+                     topology=make_topology(args.topology, n),
+                     compression=comp, gamma=args.gamma)
+    opt = make_optimizer(args.optimizer, args.lr)
+
+    corpus = SyntheticLM(vocab_size=cfg.vocab_size, num_nodes=n,
+                         noniid_alpha=args.noniid)
+
+    def loss_fn(p, b, k):
+        return train_loss(p, b, cfg, k)
+
+    params0, _ = init_params(cfg, jax.random.key(0))
+    state = init_state(params0, n, opt, jax.random.key(1),
+                       compressed=dcfg.is_compressed)
+    start_round = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        restored, start_round = restore_checkpoint(args.ckpt_dir, state.params)
+        state = state._replace(
+            params=jax.tree_util.tree_map(jnp.asarray, restored))
+        print(f"restored round {start_round} from {args.ckpt_dir}")
+
+    round_fn = jax.jit(make_round_fn(dcfg, loss_fn, opt))
+    bits = round_wire_bits(dcfg, params0)
+    print(f"arch={cfg.name} nodes={n} tau=({args.tau1},{args.tau2}) "
+          f"zeta={dcfg.topology.zeta:.3f} comp={args.compression or 'none'} "
+          f"wire={bits/8e6:.1f} MB/round/node")
+
+    t0 = time.time()
+    for r in range(start_round, start_round + args.rounds):
+        def fetch(mem_needed=cfg.has_memory_input):
+            b = lm_batches_for_dfl(corpus, args.tau1, n, args.batch,
+                                   args.seq, r)
+            if mem_needed:
+                m = cfg.memory_tokens or 16
+                key = jax.random.key(1000 + r)
+                b["memory"] = jax.random.normal(
+                    key, (args.tau1, n, args.batch, m,
+                          cfg.memory_dim or cfg.d_model), jnp.float32)
+            return b
+
+        state, metrics = round_fn(state, fetch())
+        if (r + 1) % args.log_every == 0:
+            print(f"round {r+1:4d} loss={float(metrics['loss']):.4f} "
+                  f"consensus={float(metrics['consensus_sq']):.3e} "
+                  f"({(time.time()-t0)/(r-start_round+1):.1f}s/round)",
+                  flush=True)
+        if args.ckpt_dir and args.ckpt_every and (r + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, r + 1, state.params,
+                            {"loss": float(metrics["loss"])})
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, start_round + args.rounds,
+                        state.params, {})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Model zoo: one generic stack, six architecture families."""
+from repro.models.common import (
+    Annotated,
+    LayerSpec,
+    ModelConfig,
+    ParamFactory,
+    pad_vocab,
+    rms_norm,
+    rope,
+    split_annotations,
+    swiglu,
+)
+from repro.models.transformer import (
+    DecodeState,
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    prefill,
+    train_loss,
+)
+
+__all__ = [
+    "Annotated", "LayerSpec", "ModelConfig", "ParamFactory", "pad_vocab",
+    "rms_norm", "rope", "split_annotations", "swiglu",
+    "DecodeState", "decode_step", "forward", "init_decode_state",
+    "init_params", "prefill", "train_loss",
+]

@@ -1,0 +1,92 @@
+"""The paper's CNNs (Appendix C, Table II) in pure JAX.
+
+MNIST CNN : conv[1,16,3x3](same) -> ReLU -> maxpool 2x2
+            conv[16,32,3x3](same) -> ReLU -> maxpool 2x2
+            dense[32*7*7, 10]
+CIFAR CNN : conv[3,64,5x5](valid) -> ReLU -> maxpool 3x3/2
+            conv[64,64,5x5](valid) -> ReLU -> maxpool 3x3/2
+            dense[64*4*4,384] -> ReLU -> dense[384,192] -> ReLU -> dense[192,10]
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    std = 1.0 / math.sqrt(kh * kw * cin)
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * std
+
+
+def _dense_init(key, fin, fout):
+    std = 1.0 / math.sqrt(fin)
+    return jax.random.normal(key, (fin, fout), jnp.float32) * std
+
+
+def init_cnn(key: jax.Array, flavor: str = "mnist") -> PyTree:
+    ks = jax.random.split(key, 8)
+    if flavor == "mnist":
+        return {
+            "c1": _conv_init(ks[0], 3, 3, 1, 16), "b1": jnp.zeros((16,)),
+            "c2": _conv_init(ks[1], 3, 3, 16, 32), "b2": jnp.zeros((32,)),
+            "d1": _dense_init(ks[2], 32 * 7 * 7, 10), "db1": jnp.zeros((10,)),
+        }
+    if flavor == "cifar":
+        return {
+            "c1": _conv_init(ks[0], 5, 5, 3, 64), "b1": jnp.zeros((64,)),
+            "c2": _conv_init(ks[1], 5, 5, 64, 64), "b2": jnp.zeros((64,)),
+            "d1": _dense_init(ks[2], 64 * 4 * 4, 384), "db1": jnp.zeros((384,)),
+            "d2": _dense_init(ks[3], 384, 192), "db2": jnp.zeros((192,)),
+            "d3": _dense_init(ks[4], 192, 10), "db3": jnp.zeros((10,)),
+        }
+    raise ValueError(flavor)
+
+
+def _conv(x, w, b, padding):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b
+
+
+def _maxpool(x, k, s):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, s, s, 1), "VALID")
+
+
+def cnn_logits(params: PyTree, x: jnp.ndarray, flavor: str = "mnist"):
+    if flavor == "mnist":
+        h = jax.nn.relu(_conv(x, params["c1"], params["b1"], "SAME"))
+        h = _maxpool(h, 2, 2)
+        h = jax.nn.relu(_conv(h, params["c2"], params["b2"], "SAME"))
+        h = _maxpool(h, 2, 2)
+        h = h.reshape(h.shape[0], -1)
+        return h @ params["d1"] + params["db1"]
+    h = jax.nn.relu(_conv(x, params["c1"], params["b1"], "VALID"))
+    h = _maxpool(h, 3, 2)
+    h = jax.nn.relu(_conv(h, params["c2"], params["b2"], "VALID"))
+    h = _maxpool(h, 3, 2)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["d1"] + params["db1"])
+    h = jax.nn.relu(h @ params["d2"] + params["db2"])
+    return h @ params["d3"] + params["db3"]
+
+
+def cnn_loss(params: PyTree, batch: Tuple[jnp.ndarray, jnp.ndarray],
+             flavor: str = "mnist") -> jnp.ndarray:
+    x, y = batch
+    logits = cnn_logits(params, x, flavor).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32), 1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def cnn_accuracy(params: PyTree, x: jnp.ndarray, y: jnp.ndarray,
+                 flavor: str = "mnist") -> jnp.ndarray:
+    logits = cnn_logits(params, x, flavor)
+    return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))

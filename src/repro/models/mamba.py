@@ -1,0 +1,171 @@
+"""Mamba-1 selective-SSM mixer (falcon-mamba / jamba layers).
+
+TPU adaptation: the CUDA selective-scan kernel becomes a *chunked
+associative scan* — sequences are processed in chunks of ``cfg.ssm_chunk``;
+within a chunk the recurrence h_t = a_t h_{t-1} + u_t is evaluated with
+``jax.lax.associative_scan`` (log-depth, MXU/VPU friendly) and chunks are
+chained with a small ``lax.scan`` carry. The [B, chunk, d_inner, state]
+intermediate lives only inside one chunk — the full [B, S, d_inner, state]
+tensor is never materialized (it would be terabytes at the assigned shapes).
+
+Decode is the O(1) recurrent step on (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig, ParamFactory
+
+
+def mamba_params(f: ParamFactory, cfg: ModelConfig) -> Dict:
+    d, di, st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr, k = cfg.dt_rank_actual, cfg.ssm_conv
+    a_init = np.broadcast_to(np.arange(1, st + 1, dtype=np.float32), (di, st))
+    return {
+        "wx": f.dense((d, di), ("embed", "ssm_inner")),
+        "wz": f.dense((d, di), ("embed", "ssm_inner")),
+        "conv_w": f.dense((k, di), (None, "ssm_inner"), scale=0.2),
+        "conv_b": f.zeros((di,), ("ssm_inner",)),
+        "w_dt": f.dense((di, dtr), ("ssm_inner", None)),
+        "w_bc": f.dense((di, 2 * st), ("ssm_inner", None)),
+        "dt_proj": f.dense((dtr, di), (None, "ssm_inner")),
+        "dt_bias": f.zeros((di,), ("ssm_inner",)),
+        "a_log": f.const(np.log(a_init), ("ssm_inner", None)),
+        "d_skip": f.ones((di,), ("ssm_inner",), dtype=jnp.float32),
+        "out_proj": f.dense((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 history: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Depthwise causal conv along seq. x [B,S,di]; w [K,di]; history
+    [B,K-1,di] carries the last inputs of the previous segment."""
+    k = w.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    s = x.shape[1]
+    for i in range(k):
+        out = out + xp[:, i:i + s].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssm_inputs(p: Dict, xc: jnp.ndarray, cfg: ModelConfig):
+    """xc [B,S,di] (post conv+silu) -> (dt [B,S,di], B/C [B,S,st])."""
+    st = cfg.ssm_state
+    dt_low = jnp.einsum("bsd,dr->bsr", xc, p["w_dt"].astype(xc.dtype))
+    dt = jnp.einsum("bsr,rd->bsd", dt_low, p["dt_proj"].astype(xc.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    bc = jnp.einsum("bsd,dn->bsn", xc, p["w_bc"].astype(xc.dtype))
+    bmat = bc[..., :st].astype(jnp.float32)
+    cmat = bc[..., st:].astype(jnp.float32)
+    return dt, bmat, cmat
+
+
+def _scan_chunk(a: jnp.ndarray, u: jnp.ndarray, h0: jnp.ndarray):
+    """h_t = a_t h_{t-1} + u_t within one chunk via associative scan.
+
+    a, u: [B, Q, di, st]; h0: [B, di, st]. Returns (h_all [B,Q,di,st], h_last).
+    """
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b1 * a2 + b2
+
+    a_cum, u_cum = jax.lax.associative_scan(combine, (a, u), axis=1)
+    h_all = u_cum + a_cum * h0[:, None]
+    return h_all, h_all[:, -1]
+
+
+def mamba_mixer(
+    p: Dict,
+    x: jnp.ndarray,                 # [B, S, D]
+    cfg: ModelConfig,
+    *,
+    checkpoint: bool = False,
+    return_state: bool = False,
+):
+    """Full-sequence mamba block (train / prefill)."""
+    b, s, _ = x.shape
+    di, st = cfg.d_inner, cfg.ssm_state
+    xin = jnp.einsum("bsd,de->bse", x, p["wx"].astype(x.dtype))
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(x.dtype))
+    xc = _causal_conv(xin, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))          # [di, st]
+
+    q = cfg.ssm_chunk
+    while s % q:
+        q -= 1
+    nchunk = s // q
+
+    def chunk_body(h_prev, inp):
+        xc_c, x_raw_c = inp                                # [B, q, di] each
+        dt, bmat, cmat = _ssm_inputs(p, xc_c, cfg)
+        decay = jnp.exp(dt[..., None] * a)                 # [B,q,di,st]
+        u = (dt * xc_c.astype(jnp.float32))[..., None] * bmat[:, :, None, :]
+        h_all, h_last = _scan_chunk(decay, u, h_prev)
+        y = jnp.einsum("bqds,bqs->bqd", h_all, cmat)
+        y = y + p["d_skip"].astype(jnp.float32) * xc_c.astype(jnp.float32)
+        return h_last, y.astype(x.dtype)
+
+    if checkpoint:
+        chunk_body = jax.checkpoint(chunk_body)
+
+    xc_chunks = xc.reshape(b, nchunk, q, di).transpose(1, 0, 2, 3)
+    xin_chunks = xin.reshape(b, nchunk, q, di).transpose(1, 0, 2, 3)
+    h0 = jnp.zeros((b, di, st), jnp.float32)
+    h_last, y_chunks = jax.lax.scan(chunk_body, h0, (xc_chunks, xin_chunks))
+    y = y_chunks.transpose(1, 0, 2, 3).reshape(b, s, di)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    if return_state:
+        k = cfg.ssm_conv
+        conv_state = xin[:, -(k - 1):, :] if s >= k - 1 else jnp.pad(
+            xin, ((0, 0), (k - 1 - s, 0), (0, 0)))
+        return out, {"conv": conv_state, "ssm": h_last}
+    return out
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, abstract: bool = False) -> Dict:
+    k = cfg.ssm_conv
+    shapes = {
+        "conv": ((batch, k - 1, cfg.d_inner), cfg.dtype),
+        "ssm": ((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+    if abstract:
+        return {n: jax.ShapeDtypeStruct(sh, dt) for n, (sh, dt) in shapes.items()}
+    return {n: jnp.zeros(sh, dt) for n, (sh, dt) in shapes.items()}
+
+
+def mamba_decode(
+    p: Dict,
+    x: jnp.ndarray,                 # [B, 1, D]
+    cfg: ModelConfig,
+    state: Dict,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Single-token recurrent step."""
+    xin = jnp.einsum("bsd,de->bse", x, p["wx"].astype(x.dtype))  # [B,1,di]
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(x.dtype))
+    conv_hist = state["conv"].astype(x.dtype)
+    xc = _causal_conv(xin, p["conv_w"], p["conv_b"], history=conv_hist)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    new_conv = jnp.concatenate([conv_hist[:, 1:], xin], axis=1)
+
+    dt, bmat, cmat = _ssm_inputs(p, xc, cfg)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt[:, 0, :, None] * a)                  # [B,di,st]
+    u = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * bmat[:, 0, None, :]
+    h = decay * state["ssm"] + u
+    y = jnp.einsum("bds,bs->bd", h, cmat[:, 0])
+    y = y + p["d_skip"].astype(jnp.float32) * xc[:, 0].astype(jnp.float32)
+    y = y[:, None].astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, {"conv": new_conv.astype(cfg.dtype), "ssm": h}

@@ -1,0 +1,93 @@
+"""Mixture-of-Experts FFN: top-k routing with grouped GShard dispatch.
+
+Tokens are blocked into groups of ``dispatch_group`` (default 256) and
+dispatched to per-(group, expert) capacity buffers with one-hot einsums —
+the GShard/MaxText formulation. With small groups the dispatch einsum costs
+T * k * cf * Tg * d FLOPs ~= (Tg / (3*d_ff)) of the expert matmuls (~1-2%
+at the assigned shapes), while keeping every op an einsum that GSPMD shards
+cleanly (a scatter/gather formulation was tried first and forced
+replicated 32 GiB/device buffers — einsums win on TPU).
+
+Sharding: the group dim carries the token sharding (policy.shard_tokens);
+the expert dim of weights/buffers carries logical axis "experts" -> `model`
+mesh axis; GSPMD inserts the all-to-all between token-sharded dispatch and
+expert-sharded compute. Router load-balance aux loss is returned per call.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ParamFactory
+from repro.models.policy import shard_tokens
+
+
+def moe_params(f: ParamFactory, cfg: ModelConfig) -> Dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": f.dense((d, e), ("embed", None), scale=0.02),
+        "w_gate": f.dense((e, d, ff), ("experts", "embed", "mlp")),
+        "w_up": f.dense((e, d, ff), ("experts", "embed", "mlp")),
+        "w_down": f.dense((e, ff, d), ("experts", "mlp", "embed")),
+    }
+
+
+DISPATCH_GROUP = 256
+
+
+def moe_ffn(
+    p: Dict,
+    x: jnp.ndarray,                 # [B, S, D]
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (out [B,S,D], aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    tg = min(DISPATCH_GROUP, t)
+    while t % tg:
+        tg -= 1
+    g = t // tg
+    xg = shard_tokens(x.reshape(g, tg, d))
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)     # [G,Tg,E]
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)                 # [G,Tg,k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux loss (fraction routed vs mean prob).
+    me = jnp.mean(probs, axis=(0, 1))                               # [E]
+    assigned = jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32)
+    ce = jnp.mean(assigned, axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+
+    cap = max(1, int(cfg.capacity_factor * k * tg / e))
+    cap = min(cap, tg)
+
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)       # [G,Tg,k,E]
+    # position of each (token, choice) within its (group, expert) buffer:
+    # order: token-major then choice-major within token.
+    flat = onehot.reshape(g, tg * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                           # [G,Tg*k,E]
+    pos = pos.reshape(g, tg, k, e)
+    within_cap = pos < cap
+    slot = jnp.einsum("gtke,gtke->gtk", pos, onehot)                # slot idx
+    keep = jnp.einsum("gtke,gtke->gtk", within_cap.astype(jnp.float32), onehot)
+
+    slot_oh = jax.nn.one_hot(slot, cap, dtype=jnp.float32)          # [G,Tg,k,C]
+    # dispatch [G,Tg,E,C] (0/1), combine adds the gate weights.
+    dispatch = jnp.einsum("gtke,gtkc,gtk->gtec", onehot, slot_oh, keep)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", onehot, slot_oh,
+                         keep * gate_vals.astype(jnp.float32))
+
+    xd = x.dtype
+    expert_in = jnp.einsum("gtec,gtd->egcd", dispatch.astype(xd), xg)
+    gg = jnp.einsum("egcd,edf->egcf", expert_in, p["w_gate"].astype(xd))
+    uu = jnp.einsum("egcd,edf->egcf", expert_in, p["w_up"].astype(xd))
+    hh = jax.nn.silu(gg.astype(jnp.float32)).astype(xd) * uu
+    out_buf = jnp.einsum("egcf,efd->egcd", hh, p["w_down"].astype(xd))
+    out = jnp.einsum("gtec,egcd->gtd", combine.astype(xd), out_buf)
+    return out.reshape(b, s, d), aux

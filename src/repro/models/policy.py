@@ -1,0 +1,64 @@
+"""Activation-sharding policy (launcher-injected, model-code-agnostic).
+
+The transformer stack calls ``shard_hidden(h)`` on the residual stream at
+period boundaries (the layer-scan carry). Without this, GSPMD materializes
+the per-layer saved residuals UNSHARDED — observed 36 GiB/device on
+qwen3-8b train_4k — because nothing pins the carry's layout. The launcher
+sets a policy before tracing:
+
+    with activation_sharding(mesh, batch=("data",), seq=("model",)):
+        ... trace/lower ...
+
+Inside ``vmap`` (the DFL node dimension) the constraint composes fine: jax
+maps the spec under the batched dim. When no policy is set the call is a
+no-op (CPU tests, examples).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+
+_STATE = threading.local()
+
+
+def _current():
+    return getattr(_STATE, "policy", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, *, batch=None, seq=None, embed=None):
+    """Context: constrain hidden states [B, S, D] at layer boundaries."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    hidden = NamedSharding(mesh, P(batch, seq, embed))
+    # flattened-token tensors [B*S, ...] (MoE dispatch): shard the token dim
+    # over batch-then-seq axes jointly (b-major flatten order).
+    token_axes = tuple(a for a in (batch, seq) if a is not None) or None
+    if isinstance(token_axes, tuple) and len(token_axes) == 1:
+        token_axes = token_axes[0]
+    tokens = NamedSharding(mesh, P(token_axes))
+    prev = _current()
+    _STATE.policy = {"hidden": hidden, "tokens": tokens}
+    try:
+        yield
+    finally:
+        _STATE.policy = prev
+
+
+def shard_hidden(h: jax.Array) -> jax.Array:
+    """Apply the active residual-stream constraint (no-op without policy)."""
+    policy = _current()
+    if policy is None:
+        return h
+    return jax.lax.with_sharding_constraint(h, policy["hidden"])
+
+
+def shard_tokens(x: jax.Array) -> jax.Array:
+    """Constrain a flattened-token tensor [T, ...] on its leading dim."""
+    policy = _current()
+    if policy is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, policy["tokens"])

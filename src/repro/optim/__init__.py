@@ -1,0 +1,16 @@
+"""Optimizers and LR schedules (minimal optax-style, vmap-friendly)."""
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    momentum_sgd,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+)
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine, step_decay
+
+__all__ = [
+    "Optimizer", "sgd", "momentum_sgd", "adamw", "apply_updates",
+    "clip_by_global_norm",
+    "constant", "cosine_decay", "warmup_cosine", "step_decay",
+]

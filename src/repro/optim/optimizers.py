@@ -1,0 +1,151 @@
+"""Minimal optax-style optimizers.
+
+Pure-functional ``Optimizer = (init, update)`` pairs whose states are plain
+pytrees, so they compose with ``jax.vmap`` over the DFL node axis (every
+node carries its own slots) and with pjit sharding (slots inherit the
+parameter sharding).
+
+The paper trains with plain SGD (Sec. VI-A); momentum/AdamW are provided as
+framework substrate and for the LM examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "momentum_sgd",
+    "adamw",
+    "apply_updates",
+    "clip_by_global_norm",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+    """update(grads, state, params) -> (updates, new_state); params' = params + updates."""
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+class _SGDState(NamedTuple):
+    step: jnp.ndarray
+
+
+def sgd(lr) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        del params
+        return _SGDState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        del params
+        eta = sched(state.step)
+        updates = jax.tree_util.tree_map(lambda g: -eta * g, grads)
+        return updates, _SGDState(step=state.step + 1)
+
+    return Optimizer(init, update)
+
+
+class _MomentumState(NamedTuple):
+    step: jnp.ndarray
+    velocity: PyTree
+
+
+def momentum_sgd(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        v = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return _MomentumState(step=jnp.zeros((), jnp.int32), velocity=v)
+
+    def update(grads, state, params):
+        del params
+        eta = sched(state.step)
+        v = jax.tree_util.tree_map(
+            lambda vv, g: beta * vv + g.astype(jnp.float32), state.velocity, grads
+        )
+        if nesterov:
+            eff = jax.tree_util.tree_map(
+                lambda vv, g: beta * vv + g.astype(jnp.float32), v, grads
+            )
+        else:
+            eff = v
+        updates = jax.tree_util.tree_map(lambda e: -eta * e, eff)
+        return updates, _MomentumState(step=state.step + 1, velocity=v)
+
+    return Optimizer(init, update)
+
+
+class _AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+def adamw(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return _AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        eta = sched(state.step)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        t = step.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1.0 - b1**t)
+        nu_hat_scale = 1.0 / (1.0 - b2**t)
+
+        def upd(m, v, p):
+            adam = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + eps)
+            return -eta * (adam + weight_decay * p.astype(jnp.float32))
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, _AdamWState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)

@@ -1,0 +1,50 @@
+"""Learning-rate schedules, including the paper's eta_k = 4 / (mu (a + k))
+decay used by C-DFL's Proposition 2."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "cosine_decay", "warmup_cosine", "step_decay", "cdfl_decay"]
+
+
+def constant(value: float):
+    def sched(step):
+        return jnp.asarray(value, jnp.float32)
+
+    return sched
+
+
+def cosine_decay(peak: float, total_steps: int, floor: float = 0.0):
+    def sched(step):
+        frac = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        return floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+
+    return sched
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    cos = cosine_decay(peak, max(total_steps - warmup_steps, 1), floor)
+
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup_steps, 1)
+        return jnp.where(s < warmup_steps, warm, cos(step - warmup_steps))
+
+    return sched
+
+
+def step_decay(base: float, drop: float, every: int):
+    def sched(step):
+        k = (step // every).astype(jnp.float32)
+        return base * (drop**k)
+
+    return sched
+
+
+def cdfl_decay(mu: float, a: float):
+    """eta_k = 4 / (mu (a + k))  [Prop. 2; a >= 16 kappa]."""
+
+    def sched(step):
+        return 4.0 / (mu * (a + step.astype(jnp.float32)))
+
+    return sched

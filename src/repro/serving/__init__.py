@@ -1,0 +1,4 @@
+"""Batched serving engine."""
+from repro.serving.engine import Request, ServingEngine
+
+__all__ = ["Request", "ServingEngine"]

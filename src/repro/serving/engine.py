@@ -1,0 +1,148 @@
+"""Batched serving engine over the model zoo's prefill/decode steps.
+
+Design (deliberately matching what the dry-run lowers at scale):
+  * requests are grouped into equal-prompt-length buckets (right-padding
+    within a bucket up to the configured granularity);
+  * each bucket is served as one batched prefill + greedy/temperature
+    decode loop with per-request EOS masking and early stop when every
+    request in the flight is finished;
+  * the decode step reuses jitted executables across buckets of the same
+    (batch, prompt_len) signature — steady-state serving never re-traces.
+
+Continuous batching (per-slot positions) is intentionally out of scope:
+``DecodeState.position`` is flight-global, which is exactly the shape the
+production decode dry-run (decode_32k / long_500k) exercises.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_params, prefill
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: List[int]
+    max_new_tokens: int = 32
+    eos_id: int = -1                 # -1 = never stop early
+
+    def __post_init__(self):
+        assert len(self.tokens) >= 1
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: List[int]
+    prompt_len: int
+    latency_s: float
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 bucket: int = 32, max_len: int = 512,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.bucket = bucket
+        self.max_len = max_len
+        self.temperature = temperature
+        self._queue: List[Request] = []
+        self._done: Dict[int, Completion] = {}
+        self._rng = jax.random.key(seed)
+        self._prefill_cache: Dict = {}
+        self._decode_fn = jax.jit(
+            lambda p, s, t: decode_step(p, s, t, self.cfg))
+
+    # -- client API --------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        assert len(req.tokens) + req.max_new_tokens <= self.max_len, (
+            "request exceeds engine max_len")
+        self._queue.append(req)
+
+    def run_until_drained(self) -> Dict[int, Completion]:
+        while self._queue:
+            self._serve_one_flight()
+        return dict(self._done)
+
+    # -- internals ----------------------------------------------------------
+
+    def _bucket_len(self, n: int) -> int:
+        return int(np.ceil(n / self.bucket) * self.bucket)
+
+    def _take_flight(self) -> List[Request]:
+        """Pop up to max_batch requests sharing a padded prompt length."""
+        by_len = defaultdict(list)
+        for r in self._queue:
+            by_len[self._bucket_len(len(r.tokens))].append(r)
+        # serve the largest group first (throughput).
+        plen = max(by_len, key=lambda k: len(by_len[k]))
+        flight = by_len[plen][: self.max_batch]
+        for r in flight:
+            self._queue.remove(r)
+        return flight
+
+    def _prefill_fn(self, batch: int, plen: int):
+        key = (batch, plen)
+        if key not in self._prefill_cache:
+            self._prefill_cache[key] = jax.jit(
+                lambda p, b: prefill(p, b, self.cfg, max_len=self.max_len))
+        return self._prefill_cache[key]
+
+    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
+        if self.temperature <= 0.0:
+            tok = jnp.argmax(logits, -1)
+        else:
+            self._rng, sub = jax.random.split(self._rng)
+            tok = jax.random.categorical(sub, logits / self.temperature)
+        return (tok[:, None] % self.cfg.vocab_size).astype(jnp.int32)
+
+    def _serve_one_flight(self) -> None:
+        t0 = time.time()
+        flight = self._take_flight()
+        b = len(flight)
+        plen = self._bucket_len(max(len(r.tokens) for r in flight))
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(flight):
+            toks[i, plen - len(r.tokens):] = r.tokens   # left pad = repeat
+            toks[i, : plen - len(r.tokens)] = r.tokens[0]
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.has_memory_input:
+            m = self.cfg.memory_tokens or 16
+            batch["memory"] = jnp.zeros(
+                (b, m, self.cfg.memory_dim or self.cfg.d_model), jnp.float32)
+
+        logits, state = self._prefill_fn(b, plen)(self.params, batch)
+        out: List[List[int]] = [[] for _ in range(b)]
+        finished = np.zeros(b, bool)
+        budget = max(r.max_new_tokens for r in flight)
+        tok = self._sample(logits)
+        for step in range(budget):
+            t_np = np.asarray(tok)[:, 0]
+            for i, r in enumerate(flight):
+                if finished[i] or step >= r.max_new_tokens:
+                    finished[i] = True
+                    continue
+                out[i].append(int(t_np[i]))
+                if r.eos_id >= 0 and int(t_np[i]) == r.eos_id:
+                    finished[i] = True
+            if finished.all() or step == budget - 1:
+                break
+            logits, state = self._decode_fn(self.params, state, tok)
+            tok = self._sample(logits)
+        dt = time.time() - t0
+        for i, r in enumerate(flight):
+            self._done[r.uid] = Completion(
+                uid=r.uid, tokens=out[i], prompt_len=len(r.tokens),
+                latency_s=dt)

@@ -1,0 +1,91 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+
+
+OPS = [
+    C.Identity(),
+    C.TopK(frac=0.3),
+    C.TopK(frac=0.7),
+    C.RandK(frac=0.5),
+    C.QSGD(levels=8),
+    C.QSGD(levels=64),
+    C.RandomizedGossip(p=0.8),
+]
+
+
+@pytest.mark.parametrize("comp", OPS, ids=lambda c: f"{c.name}")
+def test_assumption2_in_expectation(comp):
+    """E_Q ||Q(x)-x||^2 <= (1-delta) ||x||^2  (paper Assumption 2)."""
+    key = jax.random.key(0)
+    x = jax.random.normal(jax.random.key(1), (512,))
+    nx2 = float(jnp.sum(x * x))
+    d = x.size
+    errs = []
+    for i in range(40):
+        q = comp(x, jax.random.fold_in(key, i))
+        errs.append(float(jnp.sum((q - x) ** 2)))
+    bound = (1.0 - comp.delta(d)) * nx2
+    # 10% statistical slack for the stochastic operators.
+    assert np.mean(errs) <= bound * 1.10 + 1e-6, (np.mean(errs), bound)
+
+
+def test_topk_keeps_largest():
+    x = jnp.asarray([0.1, -5.0, 0.3, 4.0, -0.2, 0.05])
+    q = C.TopK(frac=0.3)(x, None)  # k = ceil(1.8) = 2
+    assert float(q[1]) == -5.0 and float(q[3]) == 4.0
+    assert float(jnp.sum(q != 0)) == 2
+
+
+def test_randk_keeps_exactly_k():
+    x = jnp.ones((100,))
+    q = C.RandK(frac=0.25)(x, jax.random.key(0))
+    assert int(jnp.sum(q != 0)) == 25
+
+
+def test_qsgd_unbiasedness_scaledown():
+    """Rescaled QSGD contracts toward 0 but preserves sign & magnitude order."""
+    x = jnp.asarray([1.0, -2.0, 4.0, -8.0] * 64)
+    q = C.QSGD(levels=64)(x, jax.random.key(0))
+    assert float(jnp.max(jnp.abs(q))) <= float(jnp.max(jnp.abs(x))) + 1e-5
+    mask = jnp.abs(q) > 0
+    assert bool(jnp.all(jnp.sign(q[mask]) == jnp.sign(x[mask])))
+
+
+def test_rand_gossip_all_or_nothing():
+    x = jnp.arange(16.0)
+    seen = set()
+    for i in range(30):
+        q = C.RandomizedGossip(p=0.5)(x, jax.random.key(i))
+        zero = bool(jnp.all(q == 0))
+        full = bool(jnp.all(q == x))
+        assert zero or full
+        seen.add(zero)
+    assert seen == {True, False}  # both outcomes occur
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 400), st.sampled_from(["top_k", "rand_k", "qsgd",
+                                             "rand_gossip"]))
+def test_delta_in_unit_interval(d, name):
+    comp = C.make_compressor(name)
+    assert 0.0 < comp.delta(d) <= 1.0
+
+
+def test_wire_bits_ordering():
+    """Compression must reduce wire bits vs fp32 identity."""
+    tree = {"a": jnp.zeros((1000,)), "b": jnp.zeros((50, 50))}
+    full = C.tree_wire_bits(C.Identity(), tree)
+    assert C.tree_wire_bits(C.TopK(frac=0.1), tree) < full
+    assert C.tree_wire_bits(C.QSGD(levels=16), tree) < full
+    assert C.tree_wire_bits(C.RandomizedGossip(p=0.5), tree) == full * 0.5
+
+
+def test_compress_tree_structure_preserved():
+    tree = {"a": jnp.ones((7,)), "b": {"c": jnp.ones((3, 3))}}
+    out = C.compress_tree(C.TopK(frac=0.5), tree, jax.random.key(0))
+    assert jax.tree_util.tree_structure(out) == jax.tree_util.tree_structure(tree)

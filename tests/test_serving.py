@@ -1,0 +1,53 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import REGISTRY
+from repro.models import init_params
+from repro.serving import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = REGISTRY["qwen3-1.7b"].reduced
+    params, _ = init_params(cfg, jax.random.key(0))
+    return ServingEngine(cfg, params, max_batch=4, bucket=16, max_len=96)
+
+
+def test_serves_mixed_lengths(engine):
+    for uid, n, gen in [(1, 5, 8), (2, 12, 4), (3, 30, 6), (4, 7, 8)]:
+        engine.submit(Request(uid=uid, tokens=list(range(1, n + 1)),
+                              max_new_tokens=gen))
+    done = engine.run_until_drained()
+    assert set(done) == {1, 2, 3, 4}
+    assert len(done[1].tokens) == 8
+    assert len(done[2].tokens) == 4
+    assert len(done[3].tokens) == 6
+    for c in done.values():
+        assert all(0 <= t < 512 for t in c.tokens)
+
+
+def test_greedy_is_deterministic(engine):
+    engine.submit(Request(uid=10, tokens=[1, 2, 3, 4], max_new_tokens=6))
+    a = engine.run_until_drained()[10].tokens
+    engine.submit(Request(uid=11, tokens=[1, 2, 3, 4], max_new_tokens=6))
+    b = engine.run_until_drained()[11].tokens
+    assert a == b
+
+
+def test_eos_stops_early():
+    cfg = REGISTRY["qwen3-1.7b"].reduced
+    params, _ = init_params(cfg, jax.random.key(0))
+    eng = ServingEngine(cfg, params, max_batch=2, bucket=16, max_len=96)
+    # find greedy first token, then use it as the "EOS" to force early stop
+    eng.submit(Request(uid=1, tokens=[5, 6, 7], max_new_tokens=8))
+    first = eng.run_until_drained()[1].tokens[0]
+    eng.submit(Request(uid=2, tokens=[5, 6, 7], max_new_tokens=8,
+                       eos_id=first))
+    out = eng.run_until_drained()[2]
+    assert len(out.tokens) == 1 and out.tokens[0] == first
+
+
+def test_rejects_oversized_request(engine):
+    with pytest.raises(AssertionError):
+        engine.submit(Request(uid=99, tokens=[1] * 95, max_new_tokens=10))

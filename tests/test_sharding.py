@@ -1,0 +1,80 @@
+"""Unit tests of the logical-axis -> PartitionSpec rules (no devices)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding as S
+
+
+class FakeMesh:
+    """Just enough of a Mesh for spec_for_param."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH_1POD = FakeMesh({"data": 16, "model": 16})
+MESH_2POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_dp_mlp_weight():
+    spec = S.spec_for_param(("layers", "embed", "mlp"), (16, 36, 4096, 12288),
+                            "gossip-dp", MESH_1POD, node_dim=True)
+    assert spec == P("data", None, None, "model")
+
+
+def test_fsdp_mlp_weight_2d_sharded():
+    spec = S.spec_for_param(("layers", "embed", "mlp"), (4, 36, 4096, 12288),
+                            "gossip-fsdp", MESH_1POD, node_dim=True)
+    # node dim (4) not divisible by nothing -> replicated; embed->data, mlp->model
+    assert spec == P(None, None, "data", "model")
+
+
+def test_expert_dim_wins_model_axis():
+    spec = S.spec_for_param(("layers", "experts", "embed", "mlp"),
+                            (4, 32, 16, 4096, 6400),
+                            "gossip-fsdp", MESH_1POD, node_dim=True)
+    assert spec == P(None, None, "model", "data", None)
+
+
+def test_non_divisible_head_dim_replicated():
+    # 56 heads don't divide 16.
+    spec = S.spec_for_param(("embed", "heads", None), (7168, 56, 128),
+                            "gossip-dp", MESH_1POD, node_dim=False)
+    assert spec == P(None, None, None)
+
+
+def test_head_dim_mode():
+    spec = S.spec_for_param(("embed", None, "head_dim"), (7168, 56, 128),
+                            "gossip-dp", MESH_1POD, node_dim=False)
+    assert spec == P(None, None, "model")
+
+
+def test_multipod_node_axes():
+    assert S.node_axes_for("gossip-dp", MESH_2POD) == ("pod", "data")
+    assert S.node_axes_for("gossip-fsdp", MESH_2POD) == ("pod",)
+    assert S.node_axes_for("gossip-fsdp", MESH_1POD) == ()
+
+
+def test_num_nodes():
+    assert S.num_nodes_for("gossip-dp", MESH_1POD, 4) == 16
+    assert S.num_nodes_for("gossip-dp", MESH_2POD, 4) == 32
+    assert S.num_nodes_for("gossip-fsdp", MESH_1POD, 4) == 4
+    assert S.num_nodes_for("gossip-fsdp", MESH_2POD, 4) == 2
+
+
+def test_node_dim_spec_multipod():
+    spec = S.spec_for_param(("embed",), (32, 4096), "gossip-dp", MESH_2POD,
+                            node_dim=True)
+    assert spec == P(("pod", "data"), None)
+
+
+def test_vocab_sharding():
+    spec = S.spec_for_param(("vocab", "embed"), (151936, 4096), "gossip-dp",
+                            MESH_1POD, node_dim=False)
+    assert spec == P("model", None)
+    # fsdp: embed additionally over data.
+    spec = S.spec_for_param(("vocab", "embed"), (151936, 4096), "gossip-fsdp",
+                            MESH_1POD, node_dim=False)
+    assert spec == P("model", "data")

@@ -1,0 +1,32 @@
+"""Proposition 1 bound holds numerically on the analytic quadratic."""
+import numpy as np
+import pytest
+
+from benchmarks.theory_check import check, lr_condition_19, max_eta_19
+from repro.core.topology import fully_connected, ring
+
+
+@pytest.mark.parametrize("tau1,tau2", [(4, 1), (4, 4), (8, 2)])
+def test_bound_holds(tau1, tau2):
+    m, b = check(tau1=tau1, tau2=tau2, topo=ring(8), rounds=150, seeds=3)
+    assert m <= b, f"measured {m} exceeds bound {b}"
+
+
+def test_sync_special_case():
+    m, b = check(tau1=1, tau2=1, topo=fully_connected(8), rounds=150,
+                 seeds=3)
+    assert m <= b
+
+
+def test_condition_19_monotone_in_eta():
+    topo = ring(8)
+    emax = max_eta_19(4, 4, topo)
+    assert lr_condition_19(emax * 0.5, 4, 4, topo)
+    assert not lr_condition_19(emax * 1.5, 4, 4, topo)
+
+
+def test_remark1_measured_ordering():
+    """Measured gradient average improves with tau2 (Remark 1)."""
+    m1, _ = check(tau1=4, tau2=1, topo=ring(8), rounds=200, seeds=3)
+    m8, _ = check(tau1=4, tau2=8, topo=ring(8), rounds=200, seeds=3)
+    assert m8 < m1

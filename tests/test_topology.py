@@ -1,0 +1,80 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as T
+
+
+ALL_FAMILIES = [
+    lambda: T.ring(10),
+    lambda: T.quasi_ring(10),
+    lambda: T.paper_quasi_ring(),
+    lambda: T.fully_connected(10),
+    lambda: T.disconnected(6),
+    lambda: T.torus(4, 4),
+    lambda: T.hypercube(4),
+    lambda: T.star(8),
+]
+
+
+@pytest.mark.parametrize("make", ALL_FAMILIES)
+def test_doubly_stochastic_symmetric(make):
+    topo = make()
+    c = topo.mixing
+    assert np.allclose(c.sum(0), 1.0, atol=1e-9)
+    assert np.allclose(c.sum(1), 1.0, atol=1e-9)
+    assert np.allclose(c, c.T)
+    assert (c >= -1e-12).all()
+
+
+def test_paper_reported_zetas():
+    # Sec. VI-A: ring zeta = 0.87, quasi-ring zeta = 0.85.
+    assert abs(T.ring(10).zeta - 0.8727) < 5e-4
+    assert abs(T.paper_quasi_ring().zeta - 0.85) < 1e-6
+
+
+def test_zeta_extremes():
+    assert T.fully_connected(10).zeta < 1e-12           # C = J
+    assert abs(T.disconnected(10).zeta - 1.0) < 1e-12   # C = I
+
+
+def test_ring_is_circulant_with_two_shifts():
+    topo = T.ring(16)
+    shifts = topo.shifts()
+    assert len(shifts) == 2
+    assert {s for s, _ in shifts} == {1, 15}
+    assert all(abs(w - 1 / 3) < 1e-12 for _, w in shifts)
+
+
+def test_torus_circulant_on_ici_mesh():
+    topo = T.torus(4, 4)
+    assert topo.max_degree == 4
+    assert topo.zeta < T.ring(16).zeta  # denser -> better mixing
+
+
+def test_beta_range():
+    for make in ALL_FAMILIES:
+        assert 0.0 <= make().beta <= 2.0 + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(4, 20), st.integers(0, 2**31 - 1))
+def test_random_graph_valid_confusion(n, seed):
+    """Any connected random graph yields a valid C with zeta < 1."""
+    rng = np.random.default_rng(seed)
+    adj = np.zeros((n, n), dtype=np.int64)
+    for i in range(n):  # ring backbone keeps it connected
+        adj[i, (i + 1) % n] = adj[(i + 1) % n, i] = 1
+    extra = rng.integers(0, n, size=(3, 2))
+    for a, b in extra:
+        if a != b:
+            adj[a, b] = adj[b, a] = 1
+    for scheme in ("uniform", "metropolis"):
+        topo = T.from_adjacency("rand", adj, scheme)
+        topo.validate()
+        assert topo.zeta < 1.0 - 1e-9
+
+
+def test_spectral_gap_consistency():
+    topo = T.ring(10)
+    assert abs(topo.spectral_gap - (1 - topo.zeta)) < 1e-12
