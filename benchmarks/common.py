@@ -88,7 +88,9 @@ def run_dfl_cnn(spec: RunSpec, log_every: int = 5) -> Dict:
     # global train loss F(u) of the averaged model — the quantity the
     # paper's training-loss curves (and Prop. 1) track.
     gloss_fn = jax.jit(lambda p, x, y: cnn_loss(p, (x, y), spec.flavor))
-    bits_per_round = round_wire_bits(cfg, params0)
+    # engine="sparse": the paper's per-neighbor deployment accounting (deg
+    # copies/step), regardless of the single-host dense simulation engine.
+    bits_per_round = round_wire_bits(cfg, params0, engine="sparse")
 
     test_x = jnp.asarray(data.test_x)
     test_y = jnp.asarray(data.test_y)

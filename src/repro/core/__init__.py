@@ -37,8 +37,14 @@ from repro.core.dfl import (
     init_state,
     make_round_fn,
     round_wire_bits,
+    sparse_engine_eligible,
 )
-from repro.core import mixing, metrics
+from repro.core.substrate import (
+    DenseSubstrate,
+    NodeSubstrate,
+    ShardedSubstrate,
+)
+from repro.core import mixing, metrics, substrate
 
 __all__ = [
     "Topology", "ring", "quasi_ring", "paper_quasi_ring", "fully_connected", "disconnected",
@@ -49,5 +55,7 @@ __all__ = [
     "DFLConfig", "DFLState", "d_sgd_config", "c_sgd_config",
     "sync_sgd_config", "replicate", "average_model", "consensus_distance",
     "init_state", "make_round_fn", "round_wire_bits",
-    "mixing", "metrics",
+    "sparse_engine_eligible",
+    "NodeSubstrate", "DenseSubstrate", "ShardedSubstrate",
+    "mixing", "metrics", "substrate",
 ]

@@ -12,10 +12,29 @@ CHOCO-G error-feedback iteration over the shared estimates Y = [w_hat^(i)]:
     q  = Q(X - Y)                                                 (Alg. 2 l.7)
     Y <- Y + q                                                    (Alg. 2 l.11)
 
-Every parameter leaf carries a leading node dimension of size N. The engine
-is pure JAX (jit/vmap/scan) and device-layout agnostic: distribution is
-decided by the caller via shardings on the stacked arrays (see
-``repro.launch.train``) or by wrapping in ``shard_map`` (sparse mixing).
+The algorithm (local-update scan, CHOCO-G step, RNG folding, metrics) is
+written ONCE here against the ``repro.core.substrate`` node abstraction and
+executed by two engines, selected via ``make_round_fn(..., engine=...)``:
+
+  * ``"dense"``  — every parameter leaf carries a leading node dimension of
+                   size N; gossip is the X C einsum (any topology). Pure
+                   jit/vmap/scan; distribution is decided by the caller via
+                   shardings on the stacked arrays (see ``repro.launch``).
+  * ``"sparse"`` — nodes live on manual mesh axes inside ``shard_map``;
+                   gossip is per-shift ``ppermute`` (circulant C only, deg
+                   neighbor copies instead of N-1). Built by
+                   ``repro.core.sharded.make_sharded_round_fn``.
+  * ``"auto"``   — sparse iff a mesh is given, its node axes enumerate all
+                   N nodes, and ``cfg.topology.is_shift_structured()``.
+
+RNG discipline (identical on both engines, which is what makes
+dense-vs-sparse parity exact even for stochastic losses/compressors):
+``state.rng`` is a fixed base key; round key = fold_in(rng, round_idx);
+local step t key = fold_in(fold_in(round_key, 0), t); gossip step t key =
+fold_in(fold_in(round_key, 1), t); per-node key = fold_in(step_key, node).
+
+Supported JAX: 0.4.37 (pinned) and newer — version drift is absorbed by
+``repro.core.substrate``, never handled here.
 """
 from __future__ import annotations
 
@@ -27,7 +46,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mixing as mixing_lib
-from repro.core.compression import Compressor, compress_tree
+from repro.core.compression import Compressor
+from repro.core.substrate import DenseSubstrate, NodeSubstrate
 from repro.core.topology import Topology
 
 PyTree = Any
@@ -167,54 +187,49 @@ def init_state(
 
 
 def _local_updates(
-    cfg: DFLConfig, loss_fn: LossFn, opt, state: DFLState, batches: PyTree,
-    constrain=None,
-) -> Tuple[DFLState, jnp.ndarray]:
-    """tau1 per-node SGD steps; batches leaves are [tau1, N, ...].
+    cfg: DFLConfig, loss_fn: LossFn, opt, sub: NodeSubstrate,
+    params: PyTree, opt_state: PyTree, local_key: jax.Array, batches: PyTree,
+    constrain,
+) -> Tuple[PyTree, PyTree, jnp.ndarray]:
+    """tau1 per-node SGD steps (Alg. 1 l.4), engine-agnostic.
 
-    ``constrain`` (optional) re-asserts the stacked-parameter sharding on
-    grads and updated params each step: without it GSPMD may resolve the
-    scan carry / vmapped-grad shardings to replicated and all-gather entire
-    stacked weight trees (observed: 200 GiB/device on phi3.5-moe).
+    Dense: batch leaves [tau1, N, ...], params [N, ...], sub.vmap = vmap.
+    Sparse: batch leaves [tau1, ...] local, params local, sub.vmap = id.
+
+    ``constrain`` re-asserts the stacked-parameter sharding on grads and
+    updated params each step: without it GSPMD may resolve the scan carry /
+    vmapped-grad shardings to replicated and all-gather entire stacked
+    weight trees (observed: 200 GiB/device on phi3.5-moe).
     """
-    constrain = constrain or (lambda t: t)
-
-    def loss_one(params_i, batch_i, key_i):
-        return loss_fn(params_i, batch_i, key_i)
-
-    grad_one = jax.value_and_grad(loss_one)
+    grad_one = jax.value_and_grad(loss_fn)
 
     def step(carry, inp):
-        params, opt_state, rng = carry
+        params, opt_state = carry
         batch_t, t = inp
-        rng, sub = jax.random.split(rng)
-        n = jax.tree_util.tree_leaves(params)[0].shape[0]
-        keys = jax.random.split(sub, n)
-        losses, grads = jax.vmap(grad_one)(params, batch_t, keys)
+        keys = sub.node_keys(jax.random.fold_in(local_key, t))
+        losses, grads = sub.vmap(grad_one)(params, batch_t, keys)
         grads = constrain(grads)
-        updates, opt_state = jax.vmap(opt.update)(grads, opt_state, params)
+        updates, opt_state = sub.vmap(opt.update)(grads, opt_state, params)
         params = jax.tree_util.tree_map(
             lambda p, u: (p + u).astype(p.dtype), params, updates)
         params = constrain(params)
-        return (params, opt_state, rng), jnp.mean(losses)
+        return (params, opt_state), losses
 
-    (params, opt_state, rng), losses = jax.lax.scan(
-        step,
-        (state.params, state.opt_state, state.rng),
-        (batches, jnp.arange(cfg.tau1)),
-    )
-    new_state = state._replace(params=params, opt_state=opt_state, rng=rng)
-    return new_state, jnp.mean(losses)
+    (params, opt_state), losses = jax.lax.scan(
+        step, (params, opt_state), (batches, jnp.arange(cfg.tau1)))
+    mean_loss = sub.mean_over_nodes(jnp.mean(losses, axis=0))
+    return params, opt_state, mean_loss
 
 
-def _communicate_plain(cfg: DFLConfig, params: PyTree,
+def _communicate_plain(cfg: DFLConfig, sub: NodeSubstrate, params: PyTree,
                        round_idx=None) -> PyTree:
     """tau2 uncompressed gossip steps (optionally round-varying topology)."""
     if cfg.tau2 == 0:
         return params
+    dense = isinstance(sub, DenseSubstrate)
     if cfg.topology_schedule:
-        assert cfg.mixing_impl == "dense", (
-            "topology schedules use dense mixing")
+        assert dense and cfg.mixing_impl == "dense", (
+            "topology schedules use the dense engine's dense mixing")
         branches = [
             (lambda p, t=t: jax.lax.fori_loop(
                 0, cfg.tau2, lambda _, q: mixing_lib.mix_dense(q, t), p))
@@ -224,40 +239,31 @@ def _communicate_plain(cfg: DFLConfig, params: PyTree,
                else jnp.zeros((), jnp.int32)) % len(branches)
         return jax.lax.switch(sel, branches, params)
     if cfg.mixing_impl == "dense_power":
+        assert dense, "dense_power mixing is a dense-engine feature"
         return mixing_lib.mix_dense_power(params, cfg.topology, cfg.tau2)
     if cfg.mixing_impl != "dense":
         raise ValueError(f"unknown mixing_impl {cfg.mixing_impl!r}")
-
-    def body(_, p):
-        return mixing_lib.mix_dense(p, cfg.topology)
-
-    return jax.lax.fori_loop(0, cfg.tau2, body, params)
+    return jax.lax.fori_loop(0, cfg.tau2, lambda _, p: sub.mix(p), params)
 
 
 def _communicate_choco(
-    cfg: DFLConfig, params: PyTree, hat: PyTree, rng: jax.Array
+    cfg: DFLConfig, params: PyTree, hat: PyTree, rng: jax.Array,
+    sub: Optional[NodeSubstrate] = None,
 ) -> Tuple[PyTree, PyTree]:
-    """tau2 CHOCO-G compressed gossip steps (Alg. 2 lines 6-11)."""
+    """tau2 CHOCO-G compressed gossip steps (Alg. 2 lines 6-11), shared by
+    both engines: Y is mixed by ``sub.mix`` (dense einsum / ppermute), then
+    x += gamma (C Y - Y), then Q(x - Y) updates Y — with per-node keys
+    fold_in(fold_in(rng, t), node) on either substrate."""
     comp = cfg.compression
     assert comp is not None
-    c_minus_i = cfg.topology.mixing - np.eye(cfg.topology.num_nodes)
-    gamma = cfg.gamma
+    sub = sub if sub is not None else DenseSubstrate(cfg.topology)
 
     def one_step(carry, t):
         x, y = carry
-
-        def move_leaf(x_leaf, y_leaf):
-            cm = jnp.asarray(c_minus_i, dtype=jnp.float32)
-            delta = jnp.einsum("ji,j...->i...", cm, y_leaf.astype(jnp.float32))
-            return (x_leaf.astype(jnp.float32) + gamma * delta).astype(x_leaf.dtype)
-
-        x_new = jax.tree_util.tree_map(move_leaf, x, y)
-        step_key = jax.random.fold_in(rng, t)
-        # Q applied per node (independent randomness per node).
-        n = jax.tree_util.tree_leaves(x_new)[0].shape[0]
-        node_keys = jax.random.split(step_key, n)
-        diff = jax.tree_util.tree_map(lambda a, b: a - b, x_new, y)
-        q = jax.vmap(lambda d, k: compress_tree(comp, d, k))(diff, node_keys)
+        mixed_y = sub.mix(y)
+        x_new, diff = sub.choco_move(x, y, mixed_y, cfg.gamma)
+        keys = sub.node_keys(jax.random.fold_in(rng, t))
+        q = sub.vmap(lambda d, k: sub.compress(comp, d, k))(diff, keys)
         y_new = jax.tree_util.tree_map(lambda b, qq: b + qq, y, q)
         return (x_new, y_new), None
 
@@ -267,50 +273,130 @@ def _communicate_choco(
     return params, hat
 
 
+def round_keys(rng: jax.Array, round_idx) -> Tuple[jax.Array, jax.Array]:
+    """(local_key, comm_key) for one round — THE folding discipline; both
+    engines must derive their keys from here (see module docstring)."""
+    round_key = jax.random.fold_in(rng, round_idx)
+    return jax.random.fold_in(round_key, 0), jax.random.fold_in(round_key, 1)
+
+
+def round_body(
+    cfg: DFLConfig, loss_fn: LossFn, opt, sub: NodeSubstrate,
+    params: PyTree, opt_state: PyTree, hat: Optional[PyTree],
+    rng: jax.Array, round_idx, batches: PyTree, constrain=None,
+) -> Tuple[PyTree, PyTree, Optional[PyTree], dict]:
+    """One full DFL/C-DFL round on either substrate: the single shared
+    implementation both engines execute."""
+    constrain = constrain or (lambda t: t)
+    local_key, comm_key = round_keys(rng, round_idx)
+    params, opt_state, mean_loss = _local_updates(
+        cfg, loss_fn, opt, sub, params, opt_state, local_key, batches,
+        constrain)
+    if cfg.is_compressed:
+        assert hat is not None, "C-DFL needs init_state(..., compressed=True)"
+        params, hat = _communicate_choco(cfg, params, hat, comm_key, sub)
+    else:
+        params = _communicate_plain(cfg, sub, params, round_idx)
+        params = constrain(params)
+    metrics = {
+        "loss": mean_loss,
+        "consensus_sq": sub.consensus_sq(params),
+    }
+    return params, opt_state, hat, metrics
+
+
 def make_round_fn(
-    cfg: DFLConfig, loss_fn: LossFn, opt, constrain=None
+    cfg: DFLConfig, loss_fn: LossFn, opt, constrain=None, *,
+    engine: str = "dense", mesh=None, node_axes: Sequence[str] = ("data",),
+    use_kernels: bool = False,
 ) -> Callable[[DFLState, PyTree], Tuple[DFLState, dict]]:
-    """Build the jittable one-round function.
+    """Build the jittable one-round function for either engine.
 
     round_fn(state, batches) -> (state', metrics); batches leaves
     [tau1, N, local_batch...]. ``constrain``: optional params-tree sharding
-    re-assertion (see _local_updates).
+    re-assertion (see _local_updates). DENSE ENGINE ONLY: the sparse
+    engine's node axes are shard_map-manual so the node-dim constraint is
+    structural there, but its non-node (auto) axes currently run
+    unconstrained — before enabling sparse on >1-sized auto axes (see
+    substrate.supports_partial_auto) the sharded path must grow an
+    auto-axis constrain, or the scan-carry all-gather blowup documented in
+    _local_updates returns.
+
+    engine: "dense" (default; any topology), "sparse" (shard_map +
+    ppermute; needs ``mesh`` whose ``node_axes`` enumerate all N nodes and
+    a shift-structured topology), or "auto" (sparse when eligible).
+    ``use_kernels`` routes the sparse hot path through the Pallas kernels.
     """
+    if engine == "auto":
+        engine = "sparse" if sparse_engine_eligible(
+            cfg, mesh, node_axes) else "dense"
+    if engine == "sparse":
+        from repro.core.sharded import make_sharded_round_fn
+
+        assert mesh is not None, "sparse engine needs a mesh"
+        return make_sharded_round_fn(cfg, loss_fn, opt, mesh,
+                                     node_axes=node_axes,
+                                     use_kernels=use_kernels)
+    if engine != "dense":
+        raise ValueError(f"unknown engine {engine!r}")
+    sub = DenseSubstrate(cfg.topology)
 
     def round_fn(state: DFLState, batches: PyTree):
-        state, mean_loss = _local_updates(cfg, loss_fn, opt, state, batches,
-                                          constrain)
-        if cfg.is_compressed:
-            assert state.hat_params is not None, (
-                "C-DFL needs init_state(..., compressed=True)")
-            rng, sub = jax.random.split(state.rng)
-            params, hat = _communicate_choco(cfg, state.params, state.hat_params, sub)
-            state = state._replace(params=params, hat_params=hat, rng=rng)
-        else:
-            params = _communicate_plain(cfg, state.params, state.round_idx)
-            if constrain is not None:
-                params = constrain(params)
-            state = state._replace(params=params)
-        state = state._replace(round_idx=state.round_idx + 1)
-        metrics = {
-            "loss": mean_loss,
-            "consensus_sq": consensus_distance(state.params),
-        }
+        params, opt_state, hat, metrics = round_body(
+            cfg, loss_fn, opt, sub, state.params, state.opt_state,
+            state.hat_params, state.rng, state.round_idx, batches, constrain)
+        state = state._replace(
+            params=params, opt_state=opt_state, hat_params=hat,
+            round_idx=state.round_idx + 1)
         return state, metrics
 
     return round_fn
 
 
-def round_wire_bits(cfg: DFLConfig, params_one_node: PyTree) -> float:
+def sparse_engine_eligible(cfg: DFLConfig, mesh,
+                           node_axes: Sequence[str]) -> bool:
+    """True when the sparse (shard_map + ppermute) engine can run this
+    config on this mesh: circulant topology, no dense-only features, and
+    the node mesh axes enumerate exactly the N > 1 nodes."""
+    if mesh is None or cfg.topology_schedule or cfg.mixing_impl != "dense":
+        return False
+    if not cfg.topology.is_shift_structured():
+        return False
+    n = cfg.topology.num_nodes
+    if n <= 1:
+        return False
+    try:
+        mesh_n = int(np.prod([mesh.shape[a] for a in node_axes]))
+    except KeyError:
+        return False
+    if mesh_n != n:
+        return False
+    # Non-node mesh axes stay auto (GSPMD) inside the sparse engine's
+    # shard_map; on JAX pins whose partial-manual mode is broken, only
+    # size-1 auto axes are safe (see substrate.supports_partial_auto).
+    from repro.core import substrate as substrate_lib
+
+    other = [a for a in mesh.axis_names if a not in node_axes]
+    if any(mesh.shape[a] > 1 for a in other):
+        return substrate_lib.supports_partial_auto()
+    return True
+
+
+def round_wire_bits(cfg: DFLConfig, params_one_node: PyTree,
+                    engine: str = "sparse") -> float:
     """Analytic wire bits per node per ROUND (tau2 gossip steps).
 
-    Uncompressed: each gossip step ships the full fp32 model to each
-    neighbor; compressed: Q's bits_per_value. Used by the Fig.-10-style
-    wall-clock-per-bit benchmarks.
+    Uncompressed: each gossip step ships the full fp32 model per received
+    copy; compressed: Q's bits_per_value. The copy count comes from
+    ``mixing.gossip_copies_per_step(topology, engine)``: engine="sparse"
+    (default) charges per-neighbor traffic — the paper's deployment
+    accounting and the ppermute engine's actual cost — while "dense"
+    charges the dense all-gather lowering's N-1 copies. Used by the
+    Fig.-10-style wall-clock-per-bit benchmarks.
     """
     from repro.core.compression import Identity, tree_wire_bits
 
     comp = cfg.compression if cfg.is_compressed else Identity()
-    deg = cfg.topology.max_degree
-    per_step = tree_wire_bits(comp, params_one_node) * deg
+    copies = mixing_lib.gossip_copies_per_step(cfg.topology, engine)
+    per_step = tree_wire_bits(comp, params_one_node) * copies
     return per_step * cfg.tau2

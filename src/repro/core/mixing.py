@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.topology import Topology
+from repro.core.substrate import axis_size
 
 PyTree = Any
 
@@ -35,6 +36,7 @@ __all__ = [
     "mix_dense",
     "mix_dense_power",
     "mix_ppermute_shifts",
+    "gossip_copies_per_step",
     "mixing_bytes_per_step",
 ]
 
@@ -93,11 +95,12 @@ def mix_ppermute_shifts(
     node per device slice (leading node dim of local size 1).
 
     shifts: [(s, w)] meaning node i receives weight w from node (i - s) mod N
-    (equivalently sends to i + s). self_weight: diagonal of C.
+    (equivalently sends to i + s). self_weight: diagonal of C. An empty
+    shift list is the degenerate no-edge topology (C = I): no traffic, every
+    node keeps self_weight (= 1) of itself.
     """
     names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
-    sizes = [jax.lax.axis_size(n) for n in names]
-    n_total = int(np.prod(sizes))
+    n_total = axis_size(names)
 
     def perm_for(shift: int):
         return [(src, (src + shift) % n_total) for src in range(n_total)]
@@ -113,6 +116,27 @@ def mix_ppermute_shifts(
     return jax.tree_util.tree_map(mix_leaf, params)
 
 
+def gossip_copies_per_step(topology: Topology, engine: str) -> int:
+    """Model copies each node RECEIVES per gossip step — THE accounting
+    helper; every wire-cost number in the repo derives from it.
+
+    engine:
+      "sparse" — per-neighbor traffic (the ppermute engine, and what a real
+                 network deployment ships): max_degree copies.
+      "dense"  — the dense einsum's all-gather lowering: N - 1 copies,
+                 regardless of how sparse C itself is.
+      "auto"   — whichever engine the launcher would select for this
+                 topology (sparse iff shift-structured).
+    """
+    if engine == "auto":
+        engine = "sparse" if topology.is_shift_structured() else "dense"
+    if engine == "sparse":
+        return topology.max_degree
+    if engine == "dense":
+        return max(topology.num_nodes - 1, 0)
+    raise ValueError(f"unknown engine {engine!r}")
+
+
 def mixing_bytes_per_step(
     topology: Topology, param_bytes: int, sparse: bool
 ) -> int:
@@ -121,8 +145,5 @@ def mixing_bytes_per_step(
     dense (all-gather lowering): every node receives the other N-1 models.
     sparse (ppermute): every node receives deg models.
     """
-    n = topology.num_nodes
-    if sparse:
-        deg = topology.max_degree
-        return deg * param_bytes
-    return (n - 1) * param_bytes
+    engine = "sparse" if sparse else "dense"
+    return gossip_copies_per_step(topology, engine) * param_bytes

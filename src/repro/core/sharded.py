@@ -1,45 +1,42 @@
 """Production sharded DFL round: node axis manual, model axes auto.
 
-``make_sharded_round_fn`` builds the beyond-paper optimized round: each DFL
-node's local updates run as ordinary (GSPMD-partitioned) JAX under a
-``jax.shard_map`` that is manual ONLY over the node mesh axes; the gossip
-stage is per-neighbor ``collective-permute`` (ring traffic = deg copies
-instead of the dense path's N-1-copy all-gather). Supports plain DFL and
-CHOCO-G C-DFL (compression applied node-locally, neighbor estimates
-fetched by ppermute — equivalent to Alg. 2's replicated w_hat bookkeeping).
+``make_sharded_round_fn`` builds the sparse engine behind
+``core.dfl.make_round_fn(..., engine="sparse")``: each DFL node's local
+updates run as ordinary (GSPMD-partitioned) JAX under a ``shard_map`` that
+is manual ONLY over the node mesh axes; the gossip stage is per-neighbor
+``collective-permute`` (ring traffic = deg copies instead of the dense
+path's N-1-copy all-gather). Supports plain DFL and CHOCO-G C-DFL
+(compression applied node-locally, neighbor estimates fetched by ppermute —
+equivalent to Alg. 2's replicated w_hat bookkeeping), plus the Pallas
+kernel hot path (``use_kernels=True``; see ``repro.kernels``).
 
-Requires a circulant topology (ring/torus rows of the mesh); the dense
-engine (`core.dfl`) remains the general-topology path and the numerical
-reference (tests/test_multidevice.py checks they agree).
+This module owns ONLY the shard_map plumbing (specs, squeeze/unsqueeze of
+the local node dim). The round itself — local-update scan, CHOCO step, RNG
+folding, metrics — is ``core.dfl.round_body`` running on a
+``ShardedSubstrate``, i.e. the exact same code the dense engine executes,
+which is what keeps the engines from drifting apart again.
+
+Engine selection rule (applied by ``launch.steps`` / ``launch.train`` when
+engine="auto"): sparse iff ``cfg.topology.is_shift_structured()`` (circulant
+C: ring/torus rows of the mesh; includes the degenerate no-edge C = I),
+no dense-only features (schedules, dense_power), and the node mesh axes
+enumerate exactly the N > 1 nodes. The dense engine (``core.dfl``) remains
+the general-topology path and the numerical reference
+(tests/test_multidevice.py checks they agree bit-for-bit-ish, compressed
+and uncompressed). Supported JAX: 0.4.37 (pinned) and newer, via
+``repro.core.substrate``.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional, Sequence, Tuple
+from typing import Any, Callable, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core.compression import compress_tree
-from repro.core.dfl import DFLConfig, DFLState
-from repro.core.mixing import mix_ppermute_shifts
+from repro.core import substrate as substrate_lib
+from repro.core.dfl import DFLConfig, DFLState, round_body
+from repro.core.substrate import ShardedSubstrate
 
 PyTree = Any
-
-
-def _node_axis_arg(node_axes: Sequence[str]):
-    return tuple(node_axes) if len(node_axes) > 1 else node_axes[0]
-
-
-def _axis_index(node_axes: Sequence[str]) -> jnp.ndarray:
-    idx = jnp.zeros((), jnp.int32)
-    for a in node_axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
-    return idx
-
-
-def _pmean(x, node_axes):
-    return jax.lax.pmean(x, _node_axis_arg(node_axes))
 
 
 def make_sharded_round_fn(
@@ -49,19 +46,23 @@ def make_sharded_round_fn(
     mesh,
     *,
     node_axes: Sequence[str] = ("data",),
+    use_kernels: bool = False,
 ) -> Callable[[DFLState, PyTree], Tuple[DFLState, dict]]:
     """Sparse-gossip round; call under jax.jit. State leaves carry the
     stacked node dim sharded over ``node_axes`` (local size 1)."""
     from jax.sharding import PartitionSpec as P
 
-    topo = cfg.topology
-    shifts = topo.shifts()
-    assert shifts, (f"{topo.name} is not circulant; use core.dfl's dense "
-                    "engine for arbitrary topologies")
-    self_w = float(topo.self_weights[0])
-    axis = _node_axis_arg(node_axes)
-    n = topo.num_nodes
+    import numpy as np
 
+    topo = cfg.topology
+    assert topo.is_shift_structured(), (
+        f"{topo.name} is not circulant; use the dense engine "
+        "(core.dfl.make_round_fn) for arbitrary topologies")
+    mesh_n = int(np.prod([mesh.shape[a] for a in node_axes]))
+    assert mesh_n == topo.num_nodes, (
+        f"node mesh axes {tuple(node_axes)} enumerate {mesh_n} devices but "
+        f"{topo.name} has {topo.num_nodes} nodes — the size-1-per-node "
+        "shard_map layout would silently drop nodes")
     node_entry = tuple(node_axes) if len(node_axes) > 1 else node_axes[0]
     state_specs = DFLState(
         params=P(node_entry),
@@ -76,79 +77,37 @@ def make_sharded_round_fn(
         # local leaves: params [1, ...]; batches [tau1, 1, B, ...]
         squeeze = lambda t: jax.tree_util.tree_map(lambda x: x[0], t)
         unsqueeze = lambda t: jax.tree_util.tree_map(lambda x: x[None], t)
-        params = squeeze(state.params)
-        opt_state = squeeze(state.opt_state)
-        hat = squeeze(state.hat_params) if cfg.is_compressed else None
-        me = _axis_index(node_axes)
-
-        grad_fn = jax.value_and_grad(loss_fn)
-
-        def local_step(carry, batch_t):
-            p, o, k = carry
-            k, sub = jax.random.split(k)
-            loss, g = grad_fn(p, squeeze(batch_t), jax.random.fold_in(sub, me))
-            upd, o = opt.update(g, o, p)
-            p = jax.tree_util.tree_map(
-                lambda a, u: (a + u).astype(a.dtype), p, upd)
-            return (p, o, k), loss
-
-        rng = jax.random.fold_in(state.rng, me)
-        (params, opt_state, rng), losses = jax.lax.scan(
-            local_step, (params, opt_state, rng), batches)
-
-        if cfg.is_compressed:
-            comp = cfg.compression
-
-            def comm_step(carry, t):
-                x, y = carry
-                mixed_y = mix_ppermute_shifts(y, shifts, self_w, axis)
-                x = jax.tree_util.tree_map(
-                    lambda a, my, yy: (a.astype(jnp.float32) + cfg.gamma *
-                                       (my.astype(jnp.float32) -
-                                        yy.astype(jnp.float32))
-                                       ).astype(a.dtype),
-                    x, mixed_y, y)
-                key = jax.random.fold_in(jax.random.fold_in(rng, t), me)
-                diff = jax.tree_util.tree_map(lambda a, b: a - b, x, y)
-                q = compress_tree(comp, diff, key)
-                y = jax.tree_util.tree_map(lambda b, qq: b + qq, y, q)
-                return (x, y), None
-
-            (params, hat), _ = jax.lax.scan(
-                comm_step, (params, hat), jnp.arange(cfg.tau2))
-        else:
-            def comm_step(_, p):
-                return mix_ppermute_shifts(p, shifts, self_w, axis)
-
-            params = jax.lax.fori_loop(0, cfg.tau2, comm_step, params)
-
-        mean_loss = _pmean(jnp.mean(losses), node_axes)
-        # consensus ||X(I-J)||_F^2 / N via pmean of per-node deviation.
-        mean_params = jax.tree_util.tree_map(
-            lambda x: _pmean(x.astype(jnp.float32), node_axes), params)
-        dev = sum(
-            jnp.sum((a.astype(jnp.float32) - m) ** 2)
-            for a, m in zip(jax.tree_util.tree_leaves(params),
-                            jax.tree_util.tree_leaves(mean_params)))
-        consensus = _pmean(dev, node_axes)
-
+        sub = ShardedSubstrate(topo, node_axes, use_kernels=use_kernels)
+        params, opt_state, hat, metrics = round_body(
+            cfg, loss_fn, opt, sub,
+            squeeze(state.params),
+            squeeze(state.opt_state),
+            squeeze(state.hat_params) if cfg.is_compressed else None,
+            state.rng, state.round_idx,
+            # drop the local (size-1) node dim, keeping the leading tau1 dim
+            jax.tree_util.tree_map(lambda x: x[:, 0], batches))
         new_state = DFLState(
             params=unsqueeze(params),
             opt_state=unsqueeze(opt_state),
             hat_params=unsqueeze(hat) if cfg.is_compressed else None,
-            rng=jax.random.fold_in(state.rng, 1),
+            rng=None,  # typed key re-attached outside (see below)
             round_idx=state.round_idx + 1,
         )
-        return new_state, {"loss": mean_loss, "consensus_sq": consensus}
+        return new_state, metrics
 
-    in_specs = (
-        DFLState(params=state_specs.params, opt_state=state_specs.opt_state,
-                 hat_params=state_specs.hat_params, rng=state_specs.rng,
-                 round_idx=state_specs.round_idx),
-        batch_spec,
-    )
-    out_specs = (in_specs[0], P())
+    in_specs = (state_specs, batch_spec)
+    # The base PRNG key never advances (the folding discipline derives all
+    # keys from round_idx), so it is NOT returned through the shard_map
+    # boundary: XLA rejects partially-manual shardings on the typed key's
+    # trailing u32[2] layout. It rides through as None and is re-attached.
+    out_specs = (state_specs._replace(rng=None), P())
 
-    return jax.shard_map(
-        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        axis_names=set(node_axes), check_vma=False)
+    mapped = substrate_lib.shard_map(
+        body, mesh, in_specs, out_specs,
+        manual_axes=tuple(node_axes), check=False)
+
+    def round_fn(state: DFLState, batches: PyTree):
+        new_state, metrics = mapped(state, batches)
+        return new_state._replace(rng=state.rng), metrics
+
+    return round_fn

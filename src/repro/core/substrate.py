@@ -1,0 +1,324 @@
+"""JAX version-compat shims + the node-axis substrate shared by both engines.
+
+Supported JAX: the pinned 0.4.37 (this container) up through current
+releases. Two API drifts are papered over here so the rest of the codebase
+never touches them again (``jax.lax.axis_size`` landing silently broke the
+whole sparse engine once — see tests/test_multidevice.py):
+
+  * ``jax.lax.axis_size``    — absent in 0.4.37; ``lax.psum(1, axis)`` is
+                               the portable spelling (returns a static int
+                               for a concrete operand inside shard_map).
+  * ``jax.shard_map``        — 0.4.37 only has
+                               ``jax.experimental.shard_map.shard_map`` with
+                               ``check_rep=``/``auto=``; newer JAX renames
+                               these to ``check_vma=``/``axis_names=``.
+
+The second half of the module is the *node substrate*: one small object
+that abstracts "the node axis" so the DFL algorithm (local-update scan,
+CHOCO-G step, RNG folding, metrics) is written exactly once in
+``repro.core.dfl`` and executed by two engines:
+
+  * ``DenseSubstrate``   — nodes stacked on a leading [N, ...] array axis;
+                           node ops are vmap / einsum-with-C / mean(axis=0).
+                           Works for ANY doubly stochastic C.
+  * ``ShardedSubstrate`` — nodes enumerated by manual mesh axes inside
+                           ``shard_map``; node ops are identity / ppermute /
+                           pmean. Requires a circulant (shift-structured) C
+                           and moves only deg neighbor copies per gossip
+                           step instead of the dense all-gather's N-1.
+
+Both substrates fold PRNG keys identically (per-node key =
+``fold_in(step_key, node_index)``), which is what makes dense-vs-sparse
+parity exact even for stochastic losses and compressors.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+AxisName = Union[str, Tuple[str, ...]]
+
+__all__ = [
+    "axis_size",
+    "shard_map",
+    "supports_partial_auto",
+    "NodeSubstrate",
+    "DenseSubstrate",
+    "ShardedSubstrate",
+]
+
+
+# ---------------------------------------------------------------------------
+# Version compat
+# ---------------------------------------------------------------------------
+
+
+def axis_size(axis_name: AxisName) -> int:
+    """Size of a named mesh axis (or product over a tuple of axes), valid
+    inside shard_map/pmap on every supported JAX version."""
+    if isinstance(axis_name, (tuple, list)):
+        return int(np.prod([axis_size(a) for a in axis_name]))
+    if hasattr(jax.lax, "axis_size"):
+        return int(jax.lax.axis_size(axis_name))
+    # psum of a concrete scalar is evaluated statically: the axis size.
+    return int(jax.lax.psum(1, axis_name))
+
+
+def shard_map(
+    f: Callable,
+    mesh,
+    in_specs,
+    out_specs,
+    *,
+    manual_axes: Optional[Sequence[str]] = None,
+    check: bool = False,
+):
+    """``shard_map`` across the check_rep->check_vma / auto->axis_names
+    renames. ``manual_axes``: mesh axes the body is manual over (all axes
+    when None); the rest stay auto (GSPMD-partitioned)."""
+    if hasattr(jax, "shard_map"):  # JAX >= 0.6
+        import inspect
+
+        kwargs = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+        params = inspect.signature(jax.shard_map).parameters
+        kwargs["check_vma" if "check_vma" in params else "check_rep"] = check
+        if manual_axes is not None and set(manual_axes) != set(mesh.axis_names):
+            kwargs["axis_names"] = set(manual_axes)
+        return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kwargs = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs,
+              "check_rep": check}
+    if manual_axes is not None and set(manual_axes) != set(mesh.axis_names):
+        kwargs["auto"] = frozenset(mesh.axis_names) - set(manual_axes)
+    return _shard_map(f, **kwargs)
+
+
+def supports_partial_auto() -> bool:
+    """Whether shard_map with a non-trivial auto (GSPMD) axis set is usable.
+
+    The pinned jaxlib 0.4.37 hard-crashes compiling scan+ppermute bodies
+    under partial-manual shard_map when an auto axis has size > 1
+    (``Check failed: sharding.IsManualSubgroup()`` in hlo_sharding_util);
+    size-1 auto axes are fine. Newer JAX (with top-level ``jax.shard_map``)
+    handles partial-manual properly. Engine auto-selection consults this so
+    a tensor-parallel mesh falls back to the dense engine on the old pin
+    instead of aborting the process.
+    """
+    return hasattr(jax, "shard_map")
+
+
+# ---------------------------------------------------------------------------
+# Node substrates
+# ---------------------------------------------------------------------------
+
+
+class NodeSubstrate:
+    """Abstracts the DFL node axis for the shared algorithm in core.dfl.
+
+    Contract (N = number of nodes):
+      * ``vmap(fn)``            — lift a per-node fn over the node axis.
+      * ``node_keys(key)``      — per-node PRNG keys, fold_in(key, node_idx).
+      * ``mix(tree)``           — one uncompressed gossip step X <- X C.
+      * ``mean_over_nodes(x)``  — mean over the node axis of per-node
+                                  scalars (dense: leading array axis;
+                                  sparse: pmean collective).
+      * ``sum_per_node(x)``     — sum an array down to one scalar per node.
+      * ``mean_tree(tree)``     — per-leaf f32 mean over nodes.
+    """
+
+    num_nodes: int
+
+    def vmap(self, fn: Callable) -> Callable:
+        raise NotImplementedError
+
+    def node_keys(self, key: jax.Array):
+        raise NotImplementedError
+
+    def mix(self, tree: PyTree) -> PyTree:
+        raise NotImplementedError
+
+    def mean_over_nodes(self, x: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def sum_per_node(self, x: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def mean_tree(self, tree: PyTree) -> PyTree:
+        raise NotImplementedError
+
+    # -- shared derived ops (identical formulas on both engines) ----------
+
+    def choco_move(self, x: PyTree, y: PyTree, mixed_y: PyTree,
+                   gamma: float) -> Tuple[PyTree, PyTree]:
+        """Fused CHOCO-G move (Alg. 2 l.6): x += gamma (C y - y); returns
+        (x_new, x_new - y)."""
+
+        def move(a, my, yy):
+            return (a.astype(jnp.float32)
+                    + gamma * (my.astype(jnp.float32) - yy.astype(jnp.float32))
+                    ).astype(a.dtype)
+
+        x_new = jax.tree_util.tree_map(move, x, mixed_y, y)
+        diff = jax.tree_util.tree_map(lambda a, b: a - b, x_new, y)
+        return x_new, diff
+
+    def compress(self, comp, tree: PyTree, key: jax.Array) -> PyTree:
+        """Apply the compressor Q leaf-wise (one node's tree + key)."""
+        from repro.core.compression import compress_tree
+
+        return compress_tree(comp, tree, key)
+
+    def consensus_sq(self, params: PyTree) -> jnp.ndarray:
+        """||X (I - J)||_F^2 / N (Lemma 1's drift), via per-node deviation
+        from the node mean."""
+        mean = self.mean_tree(params)
+        dev = None
+        for leaf, m in zip(jax.tree_util.tree_leaves(params),
+                           jax.tree_util.tree_leaves(mean)):
+            d = (leaf.astype(jnp.float32) - m.astype(jnp.float32)) ** 2
+            per_node = self.sum_per_node(d)
+            dev = per_node if dev is None else dev + per_node
+        return self.mean_over_nodes(dev)
+
+
+class DenseSubstrate(NodeSubstrate):
+    """Stacked-array node axis: every leaf [N, ...]; any topology."""
+
+    def __init__(self, topology):
+        self.topology = topology
+        self.num_nodes = topology.num_nodes
+
+    def vmap(self, fn):
+        return jax.vmap(fn)
+
+    def node_keys(self, key):
+        return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+            jnp.arange(self.num_nodes, dtype=jnp.int32))
+
+    def mix(self, tree):
+        from repro.core import mixing as mixing_lib
+
+        return mixing_lib.mix_dense(tree, self.topology)
+
+    def mean_over_nodes(self, x):
+        return jnp.mean(x, axis=0)
+
+    def sum_per_node(self, x):
+        return jnp.sum(x, axis=tuple(range(1, x.ndim)))
+
+    def mean_tree(self, tree):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.mean(x.astype(jnp.float32), axis=0), tree)
+
+
+class ShardedSubstrate(NodeSubstrate):
+    """shard_map-manual node axis: leaves are one node's local shard; the
+    mesh axes in ``node_axes`` enumerate nodes. Requires a circulant C
+    (``topology.is_shift_structured()``); gossip is one ppermute per shift.
+
+    ``use_kernels`` routes the gossip accumulate and the CHOCO move through
+    the Pallas kernels in ``repro.kernels.ops`` (interpret mode off-TPU;
+    validated against kernels/ref.py oracles in tests/test_kernels.py).
+    """
+
+    def __init__(self, topology, node_axes: Sequence[str],
+                 use_kernels: bool = False):
+        assert topology.is_shift_structured(), (
+            f"{topology.name} is not circulant; the sharded engine needs a "
+            "shift-structured C (use the dense engine otherwise)")
+        self.topology = topology
+        self.node_axes = tuple(node_axes)
+        self.axis: AxisName = (self.node_axes if len(self.node_axes) > 1
+                               else self.node_axes[0])
+        self.shifts = topology.shifts()
+        self.self_weight = (float(topology.self_weights[0])
+                            if topology.num_nodes else 1.0)
+        self.num_nodes = topology.num_nodes
+        self.use_kernels = use_kernels
+
+    def node_index(self) -> jnp.ndarray:
+        idx = jnp.zeros((), jnp.int32)
+        for a in self.node_axes:
+            idx = idx * axis_size(a) + jax.lax.axis_index(a)
+        return idx
+
+    def vmap(self, fn):
+        return fn  # already per-node under shard_map
+
+    def node_keys(self, key):
+        return jax.random.fold_in(key, self.node_index())
+
+    def mix(self, tree):
+        from repro.core import mixing as mixing_lib
+
+        if not self.use_kernels:
+            return mixing_lib.mix_ppermute_shifts(
+                tree, self.shifts, self.self_weight, self.axis)
+
+        from repro.kernels import ops as kernel_ops
+
+        n_total = axis_size(self.axis)
+        weights = jnp.asarray(
+            [self.self_weight] + [w for _, w in self.shifts], jnp.float32)
+
+        def mix_leaf(x):
+            if not self.shifts:
+                return (self.self_weight * x.astype(jnp.float32)).astype(x.dtype)
+            moved = [
+                jax.lax.ppermute(
+                    x, self.axis,
+                    perm=[(src, (src + int(s)) % n_total)
+                          for src in range(n_total)])
+                for (s, _) in self.shifts
+            ]
+            return kernel_ops.gossip_mix(x, jnp.stack(moved), weights)
+
+        return jax.tree_util.tree_map(mix_leaf, tree)
+
+    def choco_move(self, x, y, mixed_y, gamma):
+        if not self.use_kernels:
+            return super().choco_move(x, y, mixed_y, gamma)
+        from repro.kernels import ops as kernel_ops
+
+        flat_x, treedef = jax.tree_util.tree_flatten(x)
+        flat_y = jax.tree_util.tree_leaves(y)
+        flat_my = jax.tree_util.tree_leaves(mixed_y)
+        moved = [kernel_ops.choco_move(a, b, m, gamma)
+                 for a, b, m in zip(flat_x, flat_y, flat_my)]
+        x_new = jax.tree_util.tree_unflatten(treedef, [m[0] for m in moved])
+        diff = jax.tree_util.tree_unflatten(treedef, [m[1] for m in moved])
+        return x_new, diff
+
+    def compress(self, comp, tree, key):
+        from repro.core.compression import QSGD
+
+        if not (self.use_kernels and isinstance(comp, QSGD)):
+            return super().compress(comp, tree, key)
+        from repro.kernels import ops as kernel_ops
+
+        # Same per-leaf key split and uniform noise as compression.QSGD, so
+        # the kernel output is bit-identical to the library compressor
+        # (tests/test_kernels.py::test_qsgd_kernel_agrees_with_library_compressor).
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = jax.random.split(key, max(len(leaves), 1))
+        out = [
+            kernel_ops.qsgd_quantize(
+                leaf, jax.random.uniform(k, leaf.shape), levels=comp.levels)
+            for leaf, k in zip(leaves, keys)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def mean_over_nodes(self, x):
+        return jax.lax.pmean(x, self.axis)
+
+    def sum_per_node(self, x):
+        return jnp.sum(x)
+
+    def mean_tree(self, tree):
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.pmean(x.astype(jnp.float32), self.axis), tree)

@@ -78,8 +78,19 @@ class Topology:
     def is_shift_structured(self) -> bool:
         """True if every node's neighbor set is {i+s mod N} for a common set
         of shifts with shift-invariant weights (circulant C). Such topologies
-        lower to one ``ppermute`` per shift on a TPU ring."""
-        return len(self.shifts()) > 0 or self.max_degree == 0
+        lower to one ``ppermute`` per shift on a TPU ring, and are exactly
+        the ones the sparse engine (``core.sharded``) accepts — this
+        predicate is THE engine-eligibility test, so it must agree with
+        ``shifts()``: non-empty shifts, or the explicit degenerate no-edge
+        case C = I (zero shifts — a doubly stochastic matrix with no
+        off-diagonal mass is the identity), where the sparse engine's gossip
+        is a no-op rather than an error."""
+        if self.num_nodes == 0:
+            return False
+        if self.max_degree == 0:
+            return bool(np.allclose(self.mixing,
+                                    np.eye(self.num_nodes), atol=1e-12))
+        return len(self.shifts()) > 0
 
     def shifts(self) -> List[Tuple[int, float]]:
         """Common (shift, weight) structure if C is circulant, else []."""

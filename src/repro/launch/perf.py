@@ -25,10 +25,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import ArchConfig, SHAPES
 from repro.core import mixing as mixing_lib
+from repro.core import substrate as substrate_lib
 from repro.launch import sharding as shard_lib
 from repro.launch.steps import (Built, _abstract_state, _act_policy,
                                 dfl_setup)
@@ -62,8 +62,8 @@ def build_gossip_step_sparse(arch: ArchConfig, mesh: Mesh, *,
                                               axis_name)
 
     fn = jax.jit(
-        shard_map(gossip_sparse, mesh=mesh, in_specs=(in_specs,),
-                  out_specs=in_specs, check_rep=False),
+        substrate_lib.shard_map(gossip_sparse, mesh, (in_specs,), in_specs,
+                                check=False),
         donate_argnums=(0,),
     )
     return Built(fn, (state_abs.params,), {

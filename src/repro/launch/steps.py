@@ -183,6 +183,25 @@ def _make_constrain(sharding_tree):
 # ---------------------------------------------------------------------------
 
 
+def select_engine(engine: str, dcfg, mesh: Mesh, mode: str) -> str:
+    """Resolve the round-engine choice (see core.sharded module docstring).
+
+    "auto" picks the sparse (shard_map + ppermute, deg neighbor copies)
+    engine whenever the topology is shift-structured (circulant) AND the
+    node mesh axes enumerate all N > 1 nodes (gossip-dp); everything else —
+    single-node host meshes, replicated-node gossip-fsdp, non-circulant
+    topologies, dense-only features — falls back to the dense engine.
+    """
+    if engine != "auto":
+        return engine
+    node_axes = shard_lib.node_axes_for(mode, mesh)
+    if not node_axes:
+        return "dense"
+    return ("sparse"
+            if dfl_lib.sparse_engine_eligible(dcfg, mesh, node_axes)
+            else "dense")
+
+
 def build_train_round(
     arch: ArchConfig,
     shape_name: str,
@@ -195,6 +214,8 @@ def build_train_round(
     topology: str = "ring",
     lr: float = 1e-3,
     reduced: bool = False,
+    engine: str = "auto",
+    use_kernels: bool = False,
 ) -> Built:
     cfg = arch.reduced if reduced else arch.model
     shape = SHAPES[shape_name]
@@ -206,7 +227,11 @@ def build_train_round(
     state_abs, state_sh, _ = _abstract_state(
         arch, cfg, mesh, mode, n, opt, compressed=dcfg.is_compressed)
     constrain = _make_constrain(state_sh.params)
-    round_fn = dfl_lib.make_round_fn(dcfg, loss_fn, opt, constrain=constrain)
+    engine = select_engine(engine, dcfg, mesh, mode)
+    round_fn = dfl_lib.make_round_fn(
+        dcfg, loss_fn, opt, constrain=constrain, engine=engine, mesh=mesh,
+        node_axes=shard_lib.node_axes_for(mode, mesh),
+        use_kernels=use_kernels)
     batch_abs, batch_sh = _abstract_batch(arch, cfg, shape, mesh, mode, n, tau1)
     fn = jax.jit(
         round_fn,
@@ -217,7 +242,7 @@ def build_train_round(
     return Built(fn, (state_abs, batch_abs), {
         "kind": "round", "arch": arch.arch_id, "shape": shape_name,
         "mode": mode, "nodes": n, "tau1": tau1, "tau2": tau2,
-        "mixing": mixing_impl,
+        "mixing": mixing_impl, "engine": engine,
         "compressed": dcfg.is_compressed,
     }, ctx=_act_policy(mesh, mode, "train"))
 

@@ -5,6 +5,13 @@
 
 Full-scale configs on the production mesh are exercised via dryrun.py; this
 driver actually executes on the host devices (CPU here, TPU unchanged).
+
+Engine selection (--engine): "auto" (default) runs the sparse shard_map +
+ppermute engine when the host has exactly --nodes devices and the topology
+is circulant (``sparse_engine_eligible``), else the dense stacked-array
+engine; "sparse" forces it (errors if ineligible); "dense" forces the
+reference path. --use-kernels routes the sparse hot path through the
+Pallas kernels (interpret mode off-TPU).
 """
 from __future__ import annotations
 
@@ -20,7 +27,8 @@ from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import get_arch, list_archs
 from repro.core import (DFLConfig, average_model, init_state,
                         make_compressor, make_round_fn, ring,
-                        round_wire_bits, fully_connected, paper_quasi_ring)
+                        round_wire_bits, sparse_engine_eligible,
+                        fully_connected, paper_quasi_ring)
 from repro.data.lm import SyntheticLM, lm_batches_for_dfl
 from repro.models import train_loss, init_params
 from repro.optim import sgd, momentum_sgd, adamw
@@ -54,6 +62,10 @@ def main() -> None:
     ap.add_argument("--compression", default="",
                     choices=["", "top_k", "rand_k", "qsgd", "rand_gossip"])
     ap.add_argument("--gamma", type=float, default=0.6)
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "dense", "sparse"])
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="Pallas kernels on the sparse hot path")
     ap.add_argument("--optimizer", default="sgd",
                     choices=["sgd", "momentum", "adamw"])
     ap.add_argument("--lr", type=float, default=3e-2)
@@ -91,11 +103,28 @@ def main() -> None:
             params=jax.tree_util.tree_map(jnp.asarray, restored))
         print(f"restored round {start_round} from {args.ckpt_dir}")
 
-    round_fn = jax.jit(make_round_fn(dcfg, loss_fn, opt))
-    bits = round_wire_bits(dcfg, params0)
+    mesh = None
+    if args.engine != "dense" and len(jax.devices()) == n:
+        mesh = jax.make_mesh((n,), ("nodes",))
+    eligible = (mesh is not None
+                and sparse_engine_eligible(dcfg, mesh, ("nodes",)))
+    if args.engine == "sparse" and not eligible:
+        raise SystemExit(
+            "sparse engine needs #devices == --nodes and a circulant "
+            f"topology (devices={len(jax.devices())}, nodes={n}, "
+            f"topology={dcfg.topology.name})")
+    engine = "sparse" if (args.engine != "dense" and eligible) else "dense"
+    round_fn = jax.jit(make_round_fn(
+        dcfg, loss_fn, opt, engine=engine, mesh=mesh, node_axes=("nodes",),
+        use_kernels=args.use_kernels))
+    # Wire accounting is DEPLOYMENT cost (what a real DFL network ships:
+    # engine="auto" = per-neighbor when circulant), not the host-simulation
+    # engine's, so the printed MB/round is host-device-count independent
+    # and comparable with benchmarks/common.py.
+    bits = round_wire_bits(dcfg, params0, engine="auto")
     print(f"arch={cfg.name} nodes={n} tau=({args.tau1},{args.tau2}) "
           f"zeta={dcfg.topology.zeta:.3f} comp={args.compression or 'none'} "
-          f"wire={bits/8e6:.1f} MB/round/node")
+          f"engine={engine} wire={bits/8e6:.1f} MB/round/node")
 
     t0 = time.time()
     for r in range(start_round, start_round + args.rounds):

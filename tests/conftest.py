@@ -1,0 +1,84 @@
+"""Shared test fixtures + a graceful fallback when hypothesis is absent.
+
+The tier-1 suite must always COLLECT (``pytest -x`` aborts the whole run on
+the first collection error, which once hid every later failure behind a
+missing ``hypothesis`` wheel). Four modules use hypothesis property tests;
+in environments without the package we install a minimal deterministic
+stand-in into ``sys.modules`` before those modules import: ``@given`` runs
+the test body over a fixed-seed sample of each strategy (bounded at 10
+examples) instead of skipping the module — less thorough than real
+hypothesis (no shrinking, no example database), but the properties still
+execute. Install the real dependency via ``pip install -e .[test]``
+(see pyproject.toml) to get full property-based testing.
+"""
+
+import random
+import sys
+import types
+
+
+def _install_hypothesis_fallback() -> None:
+    try:
+        import hypothesis  # noqa: F401
+        return
+    except ImportError:
+        pass
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    def floats(min_value, max_value):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: r.choice(elements))
+
+    def booleans():
+        return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+    def given(*strategies):
+        def decorate(fn):
+            def run(*args, **kwargs):
+                rng = random.Random(0)
+                n = min(getattr(run, "_max_examples", 10), 10)
+                for _ in range(n):
+                    drawn = [s.sample(rng) for s in strategies]
+                    fn(*args, *drawn, **kwargs)
+
+            # NOT functools.wraps: copying __wrapped__ would expose the
+            # strategy-filled params as pytest fixture requests.
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            run.__module__ = fn.__module__
+            run._hypothesis_fallback = True
+            return run
+
+        return decorate
+
+    def settings(max_examples=10, deadline=None, **_ignored):
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return decorate
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies_mod = types.ModuleType("hypothesis.strategies")
+    strategies_mod.integers = integers
+    strategies_mod.floats = floats
+    strategies_mod.sampled_from = sampled_from
+    strategies_mod.booleans = booleans
+    mod.strategies = strategies_mod
+    mod._is_repro_fallback = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies_mod
+
+
+_install_hypothesis_fallback()

@@ -4,7 +4,11 @@ Validates on an 8-device host mesh that:
  * the sparse ppermute gossip (shard_map) EXACTLY matches the dense einsum
    mixing for a circulant ring C;
  * a sharded DFL round (pjit, stacked node dim over 'data') matches the
-   single-device reference bit-for-bit-ish.
+   single-device reference bit-for-bit-ish;
+ * the sparse engine (make_round_fn(engine="sparse")) matches the dense
+   engine for plain DFL, for stochastic losses (unified RNG folding), and
+   for C-DFL (shared CHOCO-G step), with and without the Pallas kernel hot
+   path (interpret mode on CPU).
 """
 import os
 import subprocess
@@ -65,12 +69,9 @@ assert err2 < 1e-5, f"sharded round mismatch: {err2}"
 print("SHARDED_ROUND_OK", err2)
 
 # production sparse round (shard_map + ppermute) == dense reference.
-# NOTE: per-node rng keys differ between engines, so use a deterministic
-# (noise-free) loss for the equivalence check.
+from repro.core import make_compressor, sparse_engine_eligible
 from repro.core.sharded import make_sharded_round_fn
 targets = jnp.linspace(-1, 1, N)[:, None] * jnp.ones((N, 33))
-def det_loss(p, b, k=None):
-    return jnp.mean((p["w"] - b) ** 2)
 det_batches = jnp.broadcast_to(targets[None], (2, N, 33)) * 1.0
 det_batches = det_batches[:, :, None, :] * jnp.ones((2, N, 4, 33))
 def det_loss2(p, b, k=None):
@@ -85,6 +86,48 @@ err3 = float(jnp.max(jnp.abs(ref2.params["w"] - out2.params["w"])))
 assert err3 < 1e-5, f"production sharded round mismatch: {err3}"
 assert float(m2["consensus_sq"]) >= 0
 print("PROD_SHARDED_OK", err3)
+
+# stochastic loss: the unified RNG folding (per-node key =
+# fold_in(step_key, node)) makes dense and sparse draw identical noise.
+def noisy_loss(p, b, k=None):
+    jitter = 0.05 * jax.random.normal(k, p["w"].shape)
+    return jnp.mean((p["w"][None] + jitter[None] - b) ** 2)
+assert sparse_engine_eligible(cfg2, mesh, ("data",))
+ref_n = init_state({"w": jnp.zeros((33,))}, N, opt, jax.random.key(9))
+out_n = ref_n
+dense_n = jax.jit(make_round_fn(cfg2, noisy_loss, opt))
+sparse_n = jax.jit(make_round_fn(cfg2, noisy_loss, opt, engine="auto",
+                                 mesh=mesh, node_axes=("data",)))
+for _ in range(2):  # two rounds: exercises the round_idx key folding
+    ref_n, mr = dense_n(ref_n, det_batches)
+    out_n, ms = sparse_n(out_n, det_batches)
+err_rng = float(jnp.max(jnp.abs(ref_n.params["w"] - out_n.params["w"])))
+assert err_rng < 1e-5, f"stochastic-loss engine mismatch: {err_rng}"
+assert abs(float(mr["loss"]) - float(ms["loss"])) < 1e-5
+print("RNG_PARITY_OK", err_rng)
+
+# C-DFL parity: the shared CHOCO-G step (incl. stochastic QSGD keys) agrees
+# across engines, plain jnp and Pallas-kernel (interpret) hot paths both.
+cfg3 = DFLConfig(tau1=2, tau2=2, topology=topo,
+                 compression=make_compressor("qsgd"), gamma=0.5)
+st0c = init_state({"w": jnp.zeros((33,))}, N, opt, jax.random.key(7),
+                  compressed=True)
+ref3, _ = jax.jit(make_round_fn(cfg3, det_loss2, opt))(st0c, det_batches)
+out3, m3 = jax.jit(make_round_fn(cfg3, det_loss2, opt, engine="sparse",
+                                 mesh=mesh, node_axes=("data",)))(
+    st0c, det_batches)
+err4 = max(float(jnp.max(jnp.abs(ref3.params["w"] - out3.params["w"]))),
+           float(jnp.max(jnp.abs(ref3.hat_params["w"] -
+                                 out3.hat_params["w"]))))
+assert err4 < 1e-5, f"C-DFL engine mismatch: {err4}"
+print("CDFL_PARITY_OK", err4)
+
+out4, _ = jax.jit(make_round_fn(cfg3, det_loss2, opt, engine="sparse",
+                                mesh=mesh, node_axes=("data",),
+                                use_kernels=True))(st0c, det_batches)
+err5 = float(jnp.max(jnp.abs(ref3.params["w"] - out4.params["w"])))
+assert err5 < 1e-5, f"kernel hot path mismatch: {err5}"
+print("KERNELS_OK", err5)
 """
 
 
@@ -98,3 +141,6 @@ def test_multidevice_semantics():
     assert "PPERMUTE_OK" in out.stdout
     assert "SHARDED_ROUND_OK" in out.stdout
     assert "PROD_SHARDED_OK" in out.stdout
+    assert "RNG_PARITY_OK" in out.stdout
+    assert "CDFL_PARITY_OK" in out.stdout
+    assert "KERNELS_OK" in out.stdout
