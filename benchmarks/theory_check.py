@@ -22,34 +22,23 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.topology import Topology, fully_connected, ring
+# Condition (19) / bound (20) / max-eta live in the planner library now
+# (PR 2); re-exported here so existing imports keep working.
+from repro.planner.bounds import bound_20, lr_condition_19, max_eta_19
 
-
-def lr_condition_19(eta: float, tau1: int, tau2: int, topo: Topology,
-                    L: float = 1.0) -> bool:
-    z = topo.zeta
-    tau = tau1 + tau2
-    if z == 0.0:
-        lhs = eta * L + eta**2 * L**2 * tau * (tau - 1)
-        return lhs <= 1.0
-    lhs = eta * L + (eta**2 * L**2 * tau / (1 - z**tau2)) * (
-        2 * tau1 * z ** (2 * tau2) / (1 + z**tau2)
-        + 2 * tau1 * z**tau2 / (1 - z**tau2)
-        + tau - 1)
-    return lhs <= 1.0
-
-
-def bound_20(eta: float, tau1: int, tau2: int, topo: Topology, T: int,
-             f_gap: float, sigma: float, n: int, L: float = 1.0) -> float:
-    z = topo.zeta
-    drift = 2 * eta**2 * L**2 * sigma**2 * (tau1 / (1 - z ** (2 * tau2)) - 1
-                                            if z > 0 else tau1 - 1)
-    return 2 * f_gap / (eta * T) + eta * L * sigma**2 / n + drift
+__all__ = ["lr_condition_19", "bound_20", "max_eta_19",
+           "run_dfl_quadratic", "quadratic_loss_gap",
+           "measured_loss_at_budget", "check", "main"]
 
 
 def run_dfl_quadratic(eta: float, tau1: int, tau2: int, topo: Topology,
                       rounds: int, d: int = 16, sigma: float = 0.5,
                       seed: int = 0, target_scale: float = 1.0):
-    """Algorithm 1 in matrix form; returns avg ||grad F(u_t)||^2 over T."""
+    """Algorithm 1 in matrix form.
+
+    Returns (avg ||grad F(u_t)||^2 over T, final stacked params X, the
+    node targets t_i) — targets are returned so callers evaluate losses
+    against the exact instance that ran instead of replaying RNG draws."""
     rng = np.random.default_rng(seed)
     n = topo.num_nodes
     targets = rng.normal(size=(n, d)) * target_scale
@@ -71,19 +60,30 @@ def run_dfl_quadratic(eta: float, tau1: int, tau2: int, topo: Topology,
         for _ in range(tau2):                  # inter-node communication
             record()
             x = c.T @ x
-    return float(np.mean(grads_sq)), x
+    return float(np.mean(grads_sq)), x, targets
 
 
-def max_eta_19(tau1: int, tau2: int, topo: Topology) -> float:
-    """Largest eta satisfying condition (19), by bisection."""
-    lo, hi = 0.0, 1.0
-    for _ in range(60):
-        mid = (lo + hi) / 2
-        if lr_condition_19(mid, tau1, tau2, topo):
-            lo = mid
-        else:
-            hi = mid
-    return lo
+def quadratic_loss_gap(x: np.ndarray, targets: np.ndarray) -> float:
+    """F(u) - F_inf of the averaged model on the quadratic testbed."""
+    u = x.mean(0)
+    tbar = targets.mean(0)
+    return 0.5 * float(np.sum((u - tbar) ** 2))
+
+
+def measured_loss_at_budget(eta: float, tau1: int, tau2: int,
+                            topo: Topology, rounds: int, *, d: int = 16,
+                            sigma: float = 0.5, seeds: int = 3,
+                            target_scale: float = 1.0) -> float:
+    """bench_balance-style empirical measurement for the planner: the mean
+    (over seeds) final loss gap F(u) - F_inf after ``rounds`` rounds of the
+    (tau1, tau2) schedule — the quantity a wall-clock budget buys."""
+    gaps = []
+    for s in range(seeds):
+        _, x, targets = run_dfl_quadratic(eta, tau1, tau2, topo, rounds,
+                                          d=d, sigma=sigma, seed=s,
+                                          target_scale=target_scale)
+        gaps.append(quadratic_loss_gap(x, targets))
+    return float(np.mean(gaps))
 
 
 def check(eta=None, tau1=4, tau2=2, topo=None, rounds=400, sigma=0.5,
@@ -96,15 +96,14 @@ def check(eta=None, tau1=4, tau2=2, topo=None, rounds=400, sigma=0.5,
     measured = []
     f_gap = sigma_eff_sq = None
     for s in range(seeds):
-        rng = np.random.default_rng(s)
-        targets = rng.normal(size=(n, d)) * 0.3   # modest heterogeneity
+        m, _, targets = run_dfl_quadratic(eta, tau1, tau2, topo, rounds,
+                                          d=d, sigma=sigma, seed=s,
+                                          target_scale=0.3)  # modest het.
         tbar = targets.mean(0)
         f_gap = 0.5 * float(np.sum(tbar**2))      # F(u_1=0) - F_inf
         # Assumption 1.5 sigma^2: sampling noise + non-IID heterogeneity.
         sigma_eff_sq = sigma**2 + float(
             np.max(np.sum((targets - tbar) ** 2, axis=1)))
-        m, _ = run_dfl_quadratic(eta, tau1, tau2, topo, rounds, d=d,
-                                 sigma=sigma, seed=s, target_scale=0.3)
         measured.append(m)
     t_total = rounds * (tau1 + tau2)
     b = bound_20(eta, tau1, tau2, topo, t_total, f_gap,

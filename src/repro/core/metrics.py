@@ -72,22 +72,28 @@ def comm_compute_cost(
     link_bytes_per_s: float,
     bits_per_value_ratio: float = 1.0,
 ) -> Dict[str, float]:
-    """Analytic time model for the paper's 'balancing' trade-off.
+    """DEPRECATED shim: use ``repro.planner.cost.comm_compute_cost``.
 
-    Total time = rounds * (tau1 * t_compute + tau2 * t_comm) with
-    t_comm = degree * model_bytes * bits_ratio / link_bw. This is the object
-    that 'convergence rate ... optimized to achieve the balance of
-    communication and computing costs under constrained resources' (abstract)
-    refers to; benchmarks/bench_balance.py sweeps it against measured
-    convergence.
+    The analytic time model for the paper's 'balancing' trade-off
+    (total time = rounds * (tau1 * t_compute + tau2 * t_comm), t_comm =
+    degree * model_bytes * bits_ratio / link_bw) moved into the planner
+    subsystem, which generalizes it to topology-aware, per-engine,
+    per-compressor ``CostModel`` objects. This wrapper delegates and will
+    be removed once no caller remains.
+
+    Example: step_flops=1e9, model_bytes=4e6, degree=2, flops_per_s=1e12,
+    link_bytes_per_s=1e9 gives t_compute=1e-3 s, t_comm=8e-3 s.
     """
-    t_compute = step_flops / flops_per_s
-    t_comm = degree * model_bytes * bits_per_value_ratio / link_bytes_per_s
-    per_round = tau1 * t_compute + tau2 * t_comm
-    return {
-        "t_compute": t_compute,
-        "t_comm": t_comm,
-        "per_round": per_round,
-        "total": per_round * rounds,
-        "comm_fraction": (tau2 * t_comm) / per_round if per_round else 0.0,
-    }
+    import warnings
+
+    warnings.warn(
+        "repro.core.metrics.comm_compute_cost is deprecated; use "
+        "repro.planner.cost.comm_compute_cost (or planner.cost.CostModel)",
+        DeprecationWarning, stacklevel=2)
+    from repro.planner.cost import comm_compute_cost as _planner_cost
+
+    return _planner_cost(
+        tau1, tau2, rounds, step_flops=step_flops, model_bytes=model_bytes,
+        degree=degree, flops_per_s=flops_per_s,
+        link_bytes_per_s=link_bytes_per_s,
+        bits_per_value_ratio=bits_per_value_ratio)

@@ -202,6 +202,89 @@ def select_engine(engine: str, dcfg, mesh: Mesh, mode: str) -> str:
             else "dense")
 
 
+def plan_train_schedule(
+    arch: ArchConfig,
+    shape_name: str,
+    mesh: Mesh,
+    *,
+    budget_s: float,
+    topology: str = "ring",
+    compression: Optional[Compressor] = None,
+    flops_per_s: Optional[float] = None,
+    link_bytes_per_s: Optional[float] = None,
+    sigma: float = 1.0,
+    f_gap: float = 1.0,
+    reduced: bool = False,
+    grid=None,
+    wire_engine: str = "auto",
+):
+    """Pick (tau1, tau2) for a (arch, shape, mesh) deployment with the
+    planner (``repro.planner``) before building anything.
+
+    The compute side is priced analytically — 6 * params * tokens FLOPs
+    per local step per node at the chip's bf16 peak — and the gossip side
+    from the model's fp32 wire size over one ICI link; both are the same
+    first-order estimates the roofline uses. Returns the planner ``Plan``;
+    ``build_planned_round`` turns it straight into a Built round.
+    """
+    from repro.launch import mesh as mesh_lib
+    from repro.planner import (Budget, ComputeModel, CostModel, LinkModel,
+                               plan)
+
+    cfg = arch.reduced if reduced else arch.model
+    shape = SHAPES[shape_name]
+    _mode, n, dcfg = dfl_setup(arch, mesh, tau1=1, tau2=1,
+                               compression=compression,
+                               mixing_impl="dense", topology=topology)
+    params = cfg.param_count()
+    tokens_per_node = shape.global_batch * shape.seq_len / max(n, 1)
+    cost_model = CostModel(
+        compute=ComputeModel(
+            step_flops=6.0 * params * tokens_per_node,
+            flops_per_s=flops_per_s or mesh_lib.PEAK_FLOPS_BF16),
+        link=LinkModel(
+            bytes_per_s=link_bytes_per_s or mesh_lib.ICI_BW),
+        topology=dcfg.topology,
+        model_bits=32.0 * params,
+        engine=wire_engine)
+    kw = dict(sigma=sigma, f_gap=f_gap)
+    if grid is not None:
+        kw["grid"] = grid
+    if compression is not None:
+        kw["compressors"] = (compression,)
+    return plan(Budget(wall_clock_s=budget_s), cost_model, **kw)
+
+
+def build_planned_round(
+    arch: ArchConfig,
+    shape_name: str,
+    mesh: Mesh,
+    *,
+    budget_s: float,
+    topology: str = "ring",
+    compression: Optional[Compressor] = None,
+    reduced: bool = False,
+    **plan_kw,
+) -> Built:
+    """``build_train_round`` with (tau1, tau2) chosen by the planner; the
+    chosen Plan's knobs and prediction land in ``meta["plan"]``."""
+    p = plan_train_schedule(
+        arch, shape_name, mesh, budget_s=budget_s, topology=topology,
+        compression=compression, reduced=reduced, **plan_kw)
+    built = build_train_round(
+        arch, shape_name, mesh, tau1=p.tau1, tau2=p.tau2,
+        compression=p.compressor, topology=topology, reduced=reduced)
+    built.meta["plan"] = {
+        "tau1": p.tau1, "tau2": p.tau2, "eta": p.eta,
+        "compressor": p.compressor_name, "rounds": p.rounds,
+        "predicted_bound": p.predicted_bound,
+        "round_time_s": p.round_cost.time_s,
+        "round_wire_bits": p.round_cost.wire_bits,
+        "budget_s": budget_s,
+    }
+    return built
+
+
 def build_train_round(
     arch: ArchConfig,
     shape_name: str,

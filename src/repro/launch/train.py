@@ -12,6 +12,13 @@ is circulant (``sparse_engine_eligible``), else the dense stacked-array
 engine; "sparse" forces it (errors if ineligible); "dense" forces the
 reference path. --use-kernels routes the sparse hot path through the
 Pallas kernels (interpret mode off-TPU).
+
+Adaptive planning (--plan-budget SECONDS): hands (tau1, tau2) control to
+``repro.planner.adaptive``. The controller plans the first schedule from a
+neutral cost prior, measures real round wall-clock, re-fits per-step
+compute/gossip times, and re-plans every --replan-every rounds until the
+budget is spent; the schedule trajectory lands in the history JSON
+(--history-out).
 """
 from __future__ import annotations
 
@@ -29,9 +36,11 @@ from repro.core import (DFLConfig, average_model, init_state,
                         make_compressor, make_round_fn, ring,
                         round_wire_bits, sparse_engine_eligible,
                         fully_connected, paper_quasi_ring)
+from repro.core.compression import Identity, tree_wire_bits
 from repro.data.lm import SyntheticLM, lm_batches_for_dfl
 from repro.models import train_loss, init_params
 from repro.optim import sgd, momentum_sgd, adamw
+from repro.planner import AdaptiveController, Budget, unit_cost_model
 
 
 def make_topology(name: str, n: int):
@@ -50,7 +59,7 @@ def make_optimizer(name: str, lr: float):
     }[name]()
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list_archs())
     ap.add_argument("--reduced", action="store_true", default=True)
@@ -76,15 +85,20 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=1)
-    args = ap.parse_args()
+    ap.add_argument("--plan-budget", type=float, default=0.0,
+                    help="wall-clock budget (s); enables the adaptive "
+                         "(tau1, tau2) planner (repro.planner.adaptive)")
+    ap.add_argument("--replan-every", type=int, default=5,
+                    help="rounds between re-plans when --plan-budget is set")
+    ap.add_argument("--history-out", default="",
+                    help="write the round/plan history JSON here")
+    args = ap.parse_args(argv)
 
     arch = get_arch(args.arch)
     cfg = arch.reduced
     n = args.nodes
     comp = make_compressor(args.compression) if args.compression else None
-    dcfg = DFLConfig(tau1=args.tau1, tau2=args.tau2,
-                     topology=make_topology(args.topology, n),
-                     compression=comp, gamma=args.gamma)
+    topology = make_topology(args.topology, n)
     opt = make_optimizer(args.optimizer, args.lr)
 
     corpus = SyntheticLM(vocab_size=cfg.vocab_size, num_nodes=n,
@@ -95,7 +109,7 @@ def main() -> None:
 
     params0, _ = init_params(cfg, jax.random.key(0))
     state = init_state(params0, n, opt, jax.random.key(1),
-                       compressed=dcfg.is_compressed)
+                       compressed=comp is not None)
     start_round = 0
     if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
         restored, start_round = restore_checkpoint(args.ckpt_dir, state.params)
@@ -106,51 +120,119 @@ def main() -> None:
     mesh = None
     if args.engine != "dense" and len(jax.devices()) == n:
         mesh = jax.make_mesh((n,), ("nodes",))
-    eligible = (mesh is not None
-                and sparse_engine_eligible(dcfg, mesh, ("nodes",)))
-    if args.engine == "sparse" and not eligible:
-        raise SystemExit(
-            "sparse engine needs #devices == --nodes and a circulant "
-            f"topology (devices={len(jax.devices())}, nodes={n}, "
-            f"topology={dcfg.topology.name})")
-    engine = "sparse" if (args.engine != "dense" and eligible) else "dense"
-    round_fn = jax.jit(make_round_fn(
-        dcfg, loss_fn, opt, engine=engine, mesh=mesh, node_axes=("nodes",),
-        use_kernels=args.use_kernels))
+
+    def build(tau1: int, tau2: int):
+        """(dcfg, jitted round_fn, engine) for one (tau1, tau2) schedule."""
+        dcfg = DFLConfig(tau1=tau1, tau2=tau2, topology=topology,
+                         compression=comp, gamma=args.gamma)
+        eligible = (mesh is not None
+                    and sparse_engine_eligible(dcfg, mesh, ("nodes",)))
+        if args.engine == "sparse" and not eligible:
+            raise SystemExit(
+                "sparse engine needs #devices == --nodes and a circulant "
+                f"topology (devices={len(jax.devices())}, nodes={n}, "
+                f"topology={dcfg.topology.name})")
+        engine = "sparse" if (args.engine != "dense" and eligible) else "dense"
+        round_fn = jax.jit(make_round_fn(
+            dcfg, loss_fn, opt, engine=engine, mesh=mesh,
+            node_axes=("nodes",), use_kernels=args.use_kernels))
+        return dcfg, round_fn, engine
+
+    # Adaptive planner: --plan-budget hands (tau1, tau2) control to
+    # repro.planner.adaptive, which re-fits per-step compute/gossip times
+    # from measured round wall-clock and re-plans every --replan-every
+    # rounds. The CLI taus seed the neutral prior's first schedule.
+    controller = None
+    tau1, tau2 = args.tau1, args.tau2
+    if args.plan_budget > 0:
+        model_bits = tree_wire_bits(Identity(), params0)
+        # neutral prior: t_compute_step = t_gossip_step = 1 s, with the
+        # real topology and model wire size (same accounting as planner).
+        prior = unit_cost_model(topology, 1.0,
+                                rep_dim=max(int(model_bits // 32), 1))
+        controller = AdaptiveController(
+            Budget(wall_clock_s=args.plan_budget), prior,
+            sigma=1.0, f_gap=1.0, replan_every=args.replan_every,
+            compressors=(comp,))
+        p = controller.initial_plan()
+        tau1, tau2 = p.tau1, p.tau2
+        print(f"planned tau=({tau1},{tau2}) for budget "
+              f"{args.plan_budget:.1f}s (predicted bound "
+              f"{p.predicted_bound:.4f})")
+
+    dcfg, round_fn, engine = build(tau1, tau2)
     # Wire accounting is DEPLOYMENT cost (what a real DFL network ships:
     # engine="auto" = per-neighbor when circulant), not the host-simulation
     # engine's, so the printed MB/round is host-device-count independent
     # and comparable with benchmarks/common.py.
     bits = round_wire_bits(dcfg, params0, engine="auto")
-    print(f"arch={cfg.name} nodes={n} tau=({args.tau1},{args.tau2}) "
+    print(f"arch={cfg.name} nodes={n} tau=({tau1},{tau2}) "
           f"zeta={dcfg.topology.zeta:.3f} comp={args.compression or 'none'} "
           f"engine={engine} wire={bits/8e6:.1f} MB/round/node")
 
+    history = {"round": [], "loss": [], "consensus_sq": [], "tau1": [],
+               "tau2": [], "round_s": []}
     t0 = time.time()
+    rounds_done = 0
+    freshly_built = True   # first round after a (re)build pays jit compile
     for r in range(start_round, start_round + args.rounds):
         def fetch(mem_needed=cfg.has_memory_input):
-            b = lm_batches_for_dfl(corpus, args.tau1, n, args.batch,
+            b = lm_batches_for_dfl(corpus, tau1, n, args.batch,
                                    args.seq, r)
             if mem_needed:
                 m = cfg.memory_tokens or 16
                 key = jax.random.key(1000 + r)
                 b["memory"] = jax.random.normal(
-                    key, (args.tau1, n, args.batch, m,
+                    key, (tau1, n, args.batch, m,
                           cfg.memory_dim or cfg.d_model), jnp.float32)
             return b
 
+        tr0 = time.time()
         state, metrics = round_fn(state, fetch())
+        loss = float(metrics["loss"])          # blocks on the round
+        round_s = time.time() - tr0
+        rounds_done += 1
+        history["round"].append(r + 1)
+        history["loss"].append(loss)
+        history["consensus_sq"].append(float(metrics["consensus_sq"]))
+        history["tau1"].append(tau1)
+        history["tau2"].append(tau2)
+        history["round_s"].append(round_s)
         if (r + 1) % args.log_every == 0:
-            print(f"round {r+1:4d} loss={float(metrics['loss']):.4f} "
+            print(f"round {r+1:4d} tau=({tau1},{tau2}) loss={loss:.4f} "
                   f"consensus={float(metrics['consensus_sq']):.3e} "
-                  f"({(time.time()-t0)/(r-start_round+1):.1f}s/round)",
+                  f"({(time.time()-t0)/rounds_done:.1f}s/round)",
                   flush=True)
         if args.ckpt_dir and args.ckpt_every and (r + 1) % args.ckpt_every == 0:
             save_checkpoint(args.ckpt_dir, r + 1, state.params,
-                            {"loss": float(metrics["loss"])})
+                            {"loss": loss})
+        if controller is not None:
+            # compile-contaminated rounds spend budget but don't enter the
+            # least-squares cost fit.
+            controller.observe(tau1, tau2, round_s, fit=not freshly_built)
+            freshly_built = False
+            new = controller.maybe_replan(rounds_done)
+            if controller.exhausted:
+                print(f"budget exhausted after {rounds_done} rounds "
+                      f"({controller.spent_s:.1f}s)")
+                break
+            if new is not None:
+                tau1, tau2 = new.tau1, new.tau2
+                dcfg, round_fn, engine = build(tau1, tau2)
+                freshly_built = True
+                print(f"replanned tau=({tau1},{tau2}) at round {r+1} "
+                      f"(t_step={new.round_cost.t_compute_step:.3f}s, "
+                      f"t_gossip={new.round_cost.t_gossip_step:.3f}s, "
+                      f"predicted bound {new.predicted_bound:.4f})")
     if args.ckpt_dir:
-        save_checkpoint(args.ckpt_dir, start_round + args.rounds,
+        save_checkpoint(args.ckpt_dir, start_round + rounds_done,
                         state.params, {})
+    if controller is not None:
+        history["plan_events"] = controller.history
+    if args.history_out:
+        with open(args.history_out, "w") as f:
+            json.dump(history, f, indent=1)
+        print(f"history -> {args.history_out}")
     print("done")
 
 

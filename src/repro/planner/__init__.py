@@ -1,0 +1,68 @@
+"""Resource-constrained schedule planner (the paper's Sec. V trade-off as a
+reusable subsystem).
+
+The paper's headline claim — "the convergence rate of DFL can be optimized
+to achieve the balance of communication and computing costs under
+constrained resources" (abstract) — needs three ingredients, each of which
+is a module here:
+
+  * ``planner.cost``     — per-round wall-clock / energy / wire-bit cost
+                           models, priced per engine (dense all-gather vs
+                           sparse per-neighbor) and per compressor, with an
+                           optional wireless per-edge bandwidth/SNR link
+                           model (arXiv:2308.06496 spirit).
+  * ``planner.bounds``   — Proposition 1 as a library: learning-rate
+                           condition (19), bound (20), the C-DFL/CHOCO
+                           linear-convergence constants, and
+                           ``predicted_loss_decrement`` for planning.
+  * ``planner.optimize`` — ``plan(budget, cost_model, ...)``: search the
+                           (tau1, tau2, compressor) grid for the schedule
+                           minimizing the predicted bound within a budget.
+  * ``planner.adaptive`` — a runtime controller that re-fits the cost model
+                           from *measured* round timings and re-plans every
+                           K rounds (``train.py --plan-budget``).
+
+``benchmarks/theory_check.py`` validates the bounds numerically and
+``benchmarks/bench_balance.py`` validates the planner's picks empirically.
+"""
+from repro.planner.cost import (
+    ComputeModel,
+    CostModel,
+    LinkModel,
+    RoundCost,
+    WirelessLinks,
+    comm_compute_cost,
+    unit_cost_model,
+    wireless_link,
+)
+from repro.planner.bounds import (
+    BoundEval,
+    bound_20,
+    cdfl_contraction,
+    choco_gamma_star,
+    effective_zeta,
+    lr_condition_19,
+    max_eta_19,
+    predicted_loss_decrement,
+)
+from repro.planner.optimize import (
+    DEFAULT_GRID,
+    Budget,
+    Plan,
+    evaluate_grid,
+    plan,
+    rounds_within,
+    select_plan,
+)
+from repro.planner.adaptive import AdaptiveController
+
+__all__ = [
+    "ComputeModel", "CostModel", "LinkModel", "RoundCost", "WirelessLinks",
+    "comm_compute_cost", "unit_cost_model", "wireless_link",
+    "BoundEval", "bound_20", "cdfl_contraction", "choco_gamma_star",
+    "effective_zeta", "lr_condition_19", "max_eta_19",
+    "predicted_loss_decrement",
+    "DEFAULT_GRID", "Budget", "Plan", "evaluate_grid", "plan",
+    "rounds_within", "select_plan",
+    "AdaptiveController",
+]

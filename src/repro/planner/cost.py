@@ -1,0 +1,288 @@
+"""Composable per-round cost models for DFL schedules.
+
+A DFL round is ``tau1`` local-update steps plus ``tau2`` gossip steps; its
+resource cost decomposes as
+
+    time   = tau1 * t_compute_step + tau2 * t_gossip_step
+    bits   = tau2 * copies * model_bits * compression_ratio      (per node)
+    energy = tau1 * e_compute_step + tau2 * e_gossip_step
+
+where ``copies`` — the model copies each node receives per gossip step —
+comes from ``mixing.gossip_copies_per_step(topology, engine)`` so the dense
+all-gather lowering (N-1 copies) and the sparse per-neighbor engine
+(max_degree copies) are priced correctly, and the compression ratio comes
+from the C-DFL compressor's ``bits_per_value``. Link time is either a
+single shared ``LinkModel`` or a ``WirelessLinks`` table with per-edge
+bandwidth/SNR (Shannon capacity, in the spirit of arXiv:2308.06496's
+resource-constrained DFL over wireless networks).
+
+``CostModel.round_cost(tau1, tau2, compressor)`` is the one entry point;
+``planner.optimize.plan`` minimizes a convergence bound subject to a budget
+expressed in any of these currencies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Mapping, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core import mixing as mixing_lib
+from repro.core.compression import Compressor
+from repro.core.topology import Topology
+
+__all__ = [
+    "ComputeModel",
+    "LinkModel",
+    "WirelessLinks",
+    "wireless_link",
+    "RoundCost",
+    "CostModel",
+    "unit_cost_model",
+    "comm_compute_cost",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeModel:
+    """One local SGD step priced from its FLOPs.
+
+    step_flops: FLOPs of one local update on one node (fwd+bwd+opt).
+    flops_per_s: sustained device throughput.
+    joules_per_flop: optional energy price (0 disables energy accounting).
+    """
+
+    step_flops: float
+    flops_per_s: float
+    joules_per_flop: float = 0.0
+
+    @property
+    def t_step(self) -> float:
+        return self.step_flops / self.flops_per_s
+
+    @property
+    def energy_step(self) -> float:
+        return self.step_flops * self.joules_per_flop
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """A point-to-point link: fixed latency + bandwidth + energy price."""
+
+    bytes_per_s: float
+    latency_s: float = 0.0
+    joules_per_byte: float = 0.0
+
+    def t_transfer(self, nbytes: float) -> float:
+        return self.latency_s + nbytes / self.bytes_per_s
+
+    def energy_transfer(self, nbytes: float) -> float:
+        return nbytes * self.joules_per_byte
+
+
+def wireless_link(
+    bandwidth_hz: float,
+    snr_db: float,
+    *,
+    efficiency: float = 1.0,
+    latency_s: float = 0.0,
+    joules_per_byte: float = 0.0,
+) -> LinkModel:
+    """Shannon-capacity link: rate = eff * B * log2(1 + SNR) bits/s.
+
+    The standard physical-layer model for DFL over wireless networks
+    (arXiv:2308.06496 Sec. II): per-edge bandwidth and SNR determine the
+    achievable rate; ``efficiency`` < 1 derates for coding/protocol
+    overhead.
+    """
+    snr = 10.0 ** (snr_db / 10.0)
+    bits_per_s = efficiency * bandwidth_hz * math.log2(1.0 + snr)
+    return LinkModel(bytes_per_s=bits_per_s / 8.0, latency_s=latency_s,
+                     joules_per_byte=joules_per_byte)
+
+
+@dataclasses.dataclass(frozen=True)
+class WirelessLinks:
+    """A per-edge link table over a topology's undirected edges.
+
+    ``per_edge[(i, j)]`` (i < j) overrides ``default`` for that edge —
+    heterogeneous bandwidth/SNR per link, the defining feature of the
+    wireless DFL setting. Synchronous gossip waits for the slowest
+    transfer, so the step time is a max over the active links:
+
+      concurrency="parallel": all edges transfer simultaneously (wired
+        full-duplex ICI); t_step = max over edges of the edge time.
+      concurrency="serial": each node's radio serves its neighbors one at
+        a time (half-duplex wireless); t_step = max over nodes of the SUM
+        of that node's incoming-edge times.
+    """
+
+    default: LinkModel
+    per_edge: Mapping[Tuple[int, int], LinkModel] = dataclasses.field(
+        default_factory=dict)
+    concurrency: str = "parallel"
+
+    def link(self, i: int, j: int) -> LinkModel:
+        key = (min(i, j), max(i, j))
+        return self.per_edge.get(key, self.default)
+
+    def gossip_time(self, topology: Topology, copy_bytes: float) -> float:
+        """Time of one gossip step shipping ``copy_bytes`` per neighbor."""
+        if self.concurrency not in ("parallel", "serial"):
+            raise ValueError(f"unknown concurrency {self.concurrency!r}")
+        per_node = []
+        for i, nbrs in enumerate(topology.neighbors):
+            times = [self.link(i, j).t_transfer(copy_bytes)
+                     for (j, _w) in nbrs]
+            if not times:
+                per_node.append(0.0)
+            elif self.concurrency == "serial":
+                per_node.append(sum(times))
+            else:
+                per_node.append(max(times))
+        return max(per_node, default=0.0)
+
+    def gossip_energy(self, topology: Topology, copy_bytes: float) -> float:
+        """Per-node mean energy of one gossip step (receive side)."""
+        n = max(topology.num_nodes, 1)
+        total = sum(
+            self.link(i, j).energy_transfer(copy_bytes)
+            for i, nbrs in enumerate(topology.neighbors) for (j, _w) in nbrs)
+        return total / n
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundCost:
+    """The priced resources of ONE DFL round (per node)."""
+
+    time_s: float
+    wire_bits: float
+    energy_j: float
+    t_compute_step: float
+    t_gossip_step: float
+    _comm_time: float = 0.0
+
+    @property
+    def comm_fraction(self) -> float:
+        return self._comm_time / self.time_s if self.time_s > 0.0 else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Prices (tau1, tau2, compressor) schedules on one deployment.
+
+    compute:    the local-step model.
+    link:       a shared LinkModel or a per-edge WirelessLinks table.
+    topology:   gossip graph (copies per step + edge set).
+    model_bits: uncompressed wire bits of one model copy (fp32 tree).
+    engine:     wire-accounting engine — "sparse" per-neighbor (deployment
+                truth & the ppermute engine), "dense" all-gather lowering,
+                "auto" whichever the launcher would pick (see
+                ``mixing.gossip_copies_per_step``).
+    """
+
+    compute: ComputeModel
+    link: Union[LinkModel, WirelessLinks]
+    topology: Topology
+    model_bits: float
+    engine: str = "sparse"
+
+    def compression_ratio(self, compressor: Optional[Compressor]) -> float:
+        """Wire-bits ratio vs fp32 for one model copy (1.0 uncompressed)."""
+        if compressor is None:
+            return 1.0
+        d = max(int(round(self.model_bits / 32.0)), 1)
+        return float(compressor.bits_per_value(d)) / 32.0
+
+    def copies_per_step(self) -> int:
+        return mixing_lib.gossip_copies_per_step(self.topology, self.engine)
+
+    def gossip_bits_per_step(
+        self, compressor: Optional[Compressor] = None
+    ) -> float:
+        """Wire bits each node receives per gossip step."""
+        return (self.copies_per_step() * self.model_bits
+                * self.compression_ratio(compressor))
+
+    def t_gossip_step(self, compressor: Optional[Compressor] = None) -> float:
+        copy_bytes = (self.model_bits * self.compression_ratio(compressor)
+                      / 8.0)
+        if isinstance(self.link, WirelessLinks):
+            return self.link.gossip_time(self.topology, copy_bytes)
+        return self.link.t_transfer(self.copies_per_step() * copy_bytes)
+
+    def round_cost(self, tau1: int, tau2: int,
+                   compressor: Optional[Compressor] = None) -> RoundCost:
+        t_c = self.compute.t_step
+        t_g = self.t_gossip_step(compressor)
+        copy_bytes = (self.model_bits * self.compression_ratio(compressor)
+                      / 8.0)
+        if isinstance(self.link, WirelessLinks):
+            e_g = self.link.gossip_energy(self.topology, copy_bytes)
+        else:
+            e_g = self.link.energy_transfer(
+                self.copies_per_step() * copy_bytes)
+        comm_time = tau2 * t_g
+        return RoundCost(
+            time_s=tau1 * t_c + comm_time,
+            wire_bits=tau2 * self.gossip_bits_per_step(compressor),
+            energy_j=tau1 * self.compute.energy_step + tau2 * e_g,
+            t_compute_step=t_c,
+            t_gossip_step=t_g,
+            _comm_time=comm_time,
+        )
+
+
+def unit_cost_model(topology: Topology, comm_compute_ratio: float, *,
+                    engine: str = "sparse",
+                    rep_dim: int = 1024) -> CostModel:
+    """The benchmarks' abstract cost unit: t_compute_step = 1, and one
+    gossip step costs ``comm_compute_ratio`` — the "comm/comp" knob that
+    ``bench_balance`` sweeps. ``rep_dim`` is the representative parameter
+    count used to price compressors (their ``bits_per_value`` depends on
+    the vector dimension)."""
+    model_bits = 32.0 * rep_dim
+    copies = mixing_lib.gossip_copies_per_step(topology, engine)
+    bytes_per_step = max(copies, 1) * model_bits / 8.0
+    link = LinkModel(bytes_per_s=bytes_per_step / comm_compute_ratio)
+    return CostModel(
+        compute=ComputeModel(step_flops=1.0, flops_per_s=1.0),
+        link=link, topology=topology, model_bits=model_bits, engine=engine)
+
+
+def comm_compute_cost(
+    tau1: int,
+    tau2: int,
+    rounds: int,
+    *,
+    step_flops: float,
+    model_bytes: float,
+    degree: int,
+    flops_per_s: float,
+    link_bytes_per_s: float,
+    bits_per_value_ratio: float = 1.0,
+) -> Dict[str, float]:
+    """Analytic time model for the paper's 'balancing' trade-off.
+
+    Total time = rounds * (tau1 * t_compute + tau2 * t_comm) with
+    t_comm = degree * model_bytes * bits_ratio / link_bw. Kept as the
+    degree-explicit flat API (the old ``core.metrics.comm_compute_cost``,
+    now a deprecation shim over this); ``CostModel`` is the composable
+    topology-aware replacement.
+
+    Example: step_flops=1e9, model_bytes=4e6, degree=2, flops_per_s=1e12,
+    link_bytes_per_s=1e9 gives t_compute=1e-3 s, t_comm=8e-3 s.
+    """
+    compute = ComputeModel(step_flops=step_flops, flops_per_s=flops_per_s)
+    link = LinkModel(bytes_per_s=link_bytes_per_s)
+    t_compute = compute.t_step
+    t_comm = link.t_transfer(degree * model_bytes * bits_per_value_ratio)
+    per_round = tau1 * t_compute + tau2 * t_comm
+    return {
+        "t_compute": t_compute,
+        "t_comm": t_comm,
+        "per_round": per_round,
+        "total": per_round * rounds,
+        "comm_fraction": (tau2 * t_comm) / per_round if per_round else 0.0,
+    }

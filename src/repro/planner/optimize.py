@@ -1,0 +1,159 @@
+"""Schedule search: minimize the predicted bound under a resource budget.
+
+``plan(budget, cost_model, sigma=..., f_gap=...)`` walks the
+(tau1, tau2, compressor) grid; each candidate's per-round cost (from the
+``CostModel``) converts the budget into an affordable round count, the
+round count into a total iteration count T, and Proposition 1
+(``bounds.predicted_loss_decrement``) into a predicted average gradient
+norm — the candidate minimizing it wins. This is the paper's "convergence
+rate ... optimized to achieve the balance of communication and computing
+costs under constrained resources" (abstract / Sec. V) as an executable
+object; ``benchmarks/bench_balance.py`` validates the picks empirically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.compression import Compressor
+from repro.planner.bounds import BoundEval, predicted_loss_decrement
+from repro.planner.cost import CostModel, RoundCost
+
+__all__ = [
+    "DEFAULT_GRID",
+    "Budget",
+    "Plan",
+    "rounds_within",
+    "evaluate_grid",
+    "select_plan",
+    "plan",
+]
+
+DEFAULT_GRID: Tuple[Tuple[int, int], ...] = tuple(
+    (t1, t2) for t1 in (1, 2, 4, 8, 16) for t2 in (1, 2, 4, 8))
+
+
+@dataclasses.dataclass(frozen=True)
+class Budget:
+    """A resource envelope; any subset of currencies may be constrained.
+
+    wall_clock_s: total seconds available.
+    wire_bits: total wire bits per node available.
+    energy_j: total joules per node available.
+    """
+
+    wall_clock_s: Optional[float] = None
+    wire_bits: Optional[float] = None
+    energy_j: Optional[float] = None
+
+    def __post_init__(self):
+        if (self.wall_clock_s is None and self.wire_bits is None
+                and self.energy_j is None):
+            raise ValueError("Budget needs at least one constrained resource")
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A planned schedule: the knobs plus the prediction that chose them."""
+
+    tau1: int
+    tau2: int
+    compressor: Optional[Compressor]
+    eta: float
+    rounds: int
+    total_iters: int
+    predicted_bound: float
+    round_cost: RoundCost
+    bound_eval: BoundEval
+
+    @property
+    def compressor_name(self) -> str:
+        return self.compressor.name if self.compressor is not None else "none"
+
+
+def rounds_within(budget: Budget, rc: RoundCost) -> int:
+    """Rounds affordable under every constrained currency (floor)."""
+    limits: List[float] = []
+    if budget.wall_clock_s is not None:
+        limits.append(budget.wall_clock_s / rc.time_s if rc.time_s > 0
+                      else float("inf"))
+    if budget.wire_bits is not None:
+        limits.append(budget.wire_bits / rc.wire_bits if rc.wire_bits > 0
+                      else float("inf"))
+    if budget.energy_j is not None:
+        limits.append(budget.energy_j / rc.energy_j if rc.energy_j > 0
+                      else float("inf"))
+    lim = min(limits)
+    return int(lim) if lim != float("inf") else 10**9
+
+
+def evaluate_grid(
+    budget: Budget,
+    cost_model: CostModel,
+    *,
+    sigma: float,
+    f_gap: float,
+    grid: Sequence[Tuple[int, int]] = DEFAULT_GRID,
+    compressors: Sequence[Optional[Compressor]] = (None,),
+    gamma: float = 1.0,
+    L: float = 1.0,
+    eta: Optional[float] = None,
+) -> List[Plan]:
+    """Every feasible candidate as a Plan, in grid order (for tables)."""
+    topo = cost_model.topology
+    model_dim = max(int(round(cost_model.model_bits / 32.0)), 1)
+    out: List[Plan] = []
+    for comp in compressors:
+        for (t1, t2) in grid:
+            rc = cost_model.round_cost(t1, t2, comp)
+            r = rounds_within(budget, rc)
+            if r < 1:
+                continue
+            T = r * (t1 + t2)
+            ev = predicted_loss_decrement(
+                t1, t2, topo, sigma, T=T, f_gap=f_gap, L=L, eta=eta,
+                compressor=comp, gamma=gamma,
+                model_dim=model_dim)
+            out.append(Plan(tau1=t1, tau2=t2, compressor=comp, eta=ev.eta,
+                            rounds=r, total_iters=T,
+                            predicted_bound=ev.bound, round_cost=rc,
+                            bound_eval=ev))
+    return out
+
+
+def select_plan(cands: Sequence[Plan]) -> Plan:
+    """The winner among evaluated candidates — THE selection rule.
+
+    Deterministic tie-breaking: lower predicted bound, then cheaper round
+    time, then smaller (tau1, tau2) — so equal-bound candidates resolve
+    stably across platforms. Callers that already hold an
+    ``evaluate_grid`` result (for tables/reports) should select with this
+    instead of re-running ``plan``.
+    """
+    if not cands:
+        raise ValueError("no feasible schedule candidates to select from")
+    return min(cands, key=lambda p: (p.predicted_bound, p.round_cost.time_s,
+                                     p.tau1, p.tau2))
+
+
+def plan(
+    budget: Budget,
+    cost_model: CostModel,
+    *,
+    sigma: float,
+    f_gap: float,
+    grid: Sequence[Tuple[int, int]] = DEFAULT_GRID,
+    compressors: Sequence[Optional[Compressor]] = (None,),
+    gamma: float = 1.0,
+    L: float = 1.0,
+    eta: Optional[float] = None,
+) -> Plan:
+    """The best feasible schedule under ``budget`` by predicted bound
+    (``evaluate_grid`` then ``select_plan``)."""
+    cands = evaluate_grid(
+        budget, cost_model, sigma=sigma, f_gap=f_gap, grid=grid,
+        compressors=compressors, gamma=gamma, L=L, eta=eta)
+    if not cands:
+        raise ValueError(
+            f"no (tau1, tau2) grid point affords even one round in {budget}")
+    return select_plan(cands)

@@ -1,0 +1,82 @@
+"""Non-IID partitioners (data/federated.py): exactness, skew, determinism.
+
+This module previously had zero tests; these pin the three properties the
+paper's Sec. VI-A setup relies on: every example is assigned exactly once,
+alpha -> 0 increases label skew, and a fixed seed is reproducible.
+"""
+import numpy as np
+import pytest
+
+from repro.data.federated import dirichlet_partition, label_shard_partition
+
+NUM = 1200
+CLASSES = 10
+NODES = 8
+
+
+@pytest.fixture(scope="module")
+def labels():
+    rng = np.random.default_rng(42)
+    return rng.integers(0, CLASSES, size=NUM).astype(np.int64)
+
+
+def _assert_exact_partition(parts, n_examples):
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n_examples
+    np.testing.assert_array_equal(np.sort(allidx), np.arange(n_examples))
+
+
+@pytest.mark.parametrize("alpha", [0.05, 0.5, 100.0])
+def test_dirichlet_assigns_every_example_exactly_once(labels, alpha):
+    parts = dirichlet_partition(labels, NODES, alpha=alpha, seed=1)
+    assert len(parts) == NODES
+    _assert_exact_partition(parts, NUM)
+
+
+@pytest.mark.parametrize("shards", [1, 2, 5])
+def test_label_shard_assigns_every_example_exactly_once(labels, shards):
+    parts = label_shard_partition(labels, NODES, shards_per_node=shards,
+                                  seed=1)
+    assert len(parts) == NODES
+    _assert_exact_partition(parts, NUM)
+
+
+def _mean_max_class_fraction(labels, parts):
+    """Mean over nodes of the largest single-class share: 1/CLASSES for
+    perfectly IID splits, -> 1.0 for single-class nodes."""
+    fracs = []
+    for idx in parts:
+        if len(idx) == 0:
+            continue
+        counts = np.bincount(labels[idx], minlength=CLASSES)
+        fracs.append(counts.max() / counts.sum())
+    return float(np.mean(fracs))
+
+
+def test_dirichlet_skew_increases_as_alpha_shrinks(labels):
+    skews = [
+        np.mean([_mean_max_class_fraction(
+            labels, dirichlet_partition(labels, NODES, alpha=a, seed=s))
+            for s in range(5)])
+        for a in (100.0, 1.0, 0.05)
+    ]
+    assert skews[0] < skews[1] < skews[2], skews
+    # extremes: near-IID at alpha=100, heavily skewed at alpha=0.05
+    assert skews[0] < 0.25
+    assert skews[2] > 0.5
+
+
+def test_label_shard_more_skewed_than_iid(labels):
+    parts = label_shard_partition(labels, NODES, shards_per_node=2, seed=3)
+    assert _mean_max_class_fraction(labels, parts) > 0.35
+
+
+def test_deterministic_under_fixed_seed(labels):
+    for fn in (lambda s: dirichlet_partition(labels, NODES, 0.3, seed=s),
+               lambda s: label_shard_partition(labels, NODES, 2, seed=s)):
+        a, b = fn(7), fn(7)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+        c = fn(8)
+        assert any(len(x) != len(y) or not np.array_equal(x, y)
+                   for x, y in zip(a, c))

@@ -1,0 +1,380 @@
+"""The resource-constrained planner: cost models, Proposition-1 bounds as a
+library, grid search, and the adaptive controller.
+
+The headline acceptance tests reproduce the paper's qualitative result
+end-to-end on the analytic quadratic testbed (benchmarks/theory_check):
+as t_comm/t_compute rises the planned tau1/tau2 ratio is non-decreasing,
+and the planned schedule's MEASURED loss at budget beats every other grid
+point's (bench_balance-style simulation, not just the bound).
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from benchmarks.theory_check import run_dfl_quadratic
+from repro.core.compression import QSGD, TopK
+from repro.core.topology import fully_connected, ring, star
+from repro.planner import (AdaptiveController, Budget, ComputeModel,
+                           CostModel, LinkModel, WirelessLinks, bounds,
+                           evaluate_grid, plan, rounds_within, select_plan,
+                           unit_cost_model, wireless_link)
+
+# -- the quadratic testbed shared by the acceptance tests -------------------
+
+TOPO = ring(8)
+SIGMA = 0.5            # sampling-noise sigma of the testbed
+TSCALE = 0.8           # target (heterogeneity) scale
+REF_ROUNDS = 60        # budget = this many rounds of the (2, 2) schedule
+GRID = [(1, 4), (1, 2), (2, 2), (2, 1), (4, 1), (8, 1)]
+SEEDS = 4
+DIM = 16
+
+
+def _testbed_constants():
+    """f_gap and the Assumption-1.5 sigma (sampling + heterogeneity)."""
+    rng = np.random.default_rng(0)
+    targets = rng.normal(size=(TOPO.num_nodes, DIM)) * TSCALE
+    tbar = targets.mean(0)
+    f_gap = 0.5 * float(np.sum(tbar**2))
+    sig_eff = np.sqrt(SIGMA**2
+                      + float(np.max(np.sum((targets - tbar) ** 2, axis=1))))
+    return f_gap, sig_eff
+
+
+def _measured(eta, tau1, tau2, rounds):
+    """Mean measured avg ||grad F(u_t)||^2 — the quantity bound (20)
+    bounds — over the testbed seeds."""
+    return float(np.mean([
+        run_dfl_quadratic(eta, tau1, tau2, TOPO, rounds, d=DIM, sigma=SIGMA,
+                          seed=s, target_scale=TSCALE)[0]
+        for s in range(SEEDS)]))
+
+
+def _plan_at(ratio):
+    f_gap, sig_eff = _testbed_constants()
+    cm = unit_cost_model(TOPO, ratio)
+    budget = Budget(wall_clock_s=cm.round_cost(2, 2).time_s * REF_ROUNDS)
+    cands = evaluate_grid(budget, cm, sigma=sig_eff, f_gap=f_gap, grid=GRID)
+    return select_plan(cands), cands
+
+
+# -- acceptance: the paper's qualitative result end-to-end ------------------
+
+
+def test_planned_ratio_monotone_in_comm_cost():
+    """As t_comm/t_compute rises, planned tau1/tau2 is non-decreasing and
+    strictly rises across the sweep (paper Sec. V: slower links shift the
+    balance toward local computation)."""
+    ratios = [_plan_at(r)[0] for r in (0.2, 1.0, 5.0, 25.0)]
+    tau_ratio = [p.tau1 / p.tau2 for p in ratios]
+    assert all(a <= b for a, b in zip(tau_ratio, tau_ratio[1:])), tau_ratio
+    assert tau_ratio[-1] > tau_ratio[0], tau_ratio
+
+
+@pytest.mark.parametrize("ratio", [0.2, 25.0])
+def test_planned_schedule_wins_empirically(ratio):
+    """The planned schedule's measured loss at budget is <= every other
+    grid point's, on actual Algorithm-1 runs (not the bound)."""
+    p, cands = _plan_at(ratio)
+    measured = {(c.tau1, c.tau2): _measured(c.eta, c.tau1, c.tau2, c.rounds)
+                for c in cands}
+    mine = measured[(p.tau1, p.tau2)]
+    assert mine <= min(measured.values()) + 1e-12, (p.tau1, p.tau2, measured)
+
+
+# -- cost models ------------------------------------------------------------
+
+
+def test_unit_cost_model_prices_the_ratio():
+    cm = unit_cost_model(TOPO, 5.0)
+    rc = cm.round_cost(4, 2)
+    assert rc.t_compute_step == pytest.approx(1.0)
+    assert rc.t_gossip_step == pytest.approx(5.0)
+    assert rc.time_s == pytest.approx(4 + 2 * 5.0)
+    assert rc.comm_fraction == pytest.approx(10.0 / 14.0)
+
+
+def test_engine_accounting_dense_vs_sparse():
+    """Dense all-gather lowering ships N-1 copies; sparse ships degree."""
+    base = dict(compute=ComputeModel(1e9, 1e12),
+                link=LinkModel(1e9), topology=ring(10), model_bits=32e6)
+    sparse = CostModel(engine="sparse", **base)
+    dense = CostModel(engine="dense", **base)
+    assert sparse.copies_per_step() == 2
+    assert dense.copies_per_step() == 9
+    assert (dense.round_cost(1, 1).wire_bits
+            == pytest.approx(sparse.round_cost(1, 1).wire_bits * 9 / 2))
+
+
+def test_compression_reduces_cost():
+    cm = unit_cost_model(TOPO, 1.0)
+    full = cm.round_cost(2, 4)
+    topk = cm.round_cost(2, 4, TopK(frac=0.25))
+    qsgd = cm.round_cost(2, 4, QSGD(levels=16))
+    assert topk.wire_bits < full.wire_bits
+    assert qsgd.wire_bits < full.wire_bits
+    assert topk.time_s < full.time_s
+    # compute side is untouched by compression
+    assert topk.t_compute_step == full.t_compute_step
+
+
+def test_wireless_links_snr_and_slowest_edge():
+    """Lower SNR -> slower link; the slowest edge gates the gossip step."""
+    fast = wireless_link(20e6, 30.0)
+    slow = wireless_link(20e6, 0.0)
+    assert slow.bytes_per_s < fast.bytes_per_s
+    topo = ring(6)
+    uniform = CostModel(
+        compute=ComputeModel(1e9, 1e12),
+        link=WirelessLinks(default=fast), topology=topo, model_bits=8e6)
+    degraded = CostModel(
+        compute=ComputeModel(1e9, 1e12),
+        link=WirelessLinks(default=fast, per_edge={(0, 1): slow}),
+        topology=topo, model_bits=8e6)
+    assert (degraded.t_gossip_step()
+            > uniform.t_gossip_step())
+    # serial (half-duplex) radios sum per-node transfers
+    serial = CostModel(
+        compute=ComputeModel(1e9, 1e12),
+        link=WirelessLinks(default=fast, concurrency="serial"),
+        topology=topo, model_bits=8e6)
+    assert serial.t_gossip_step() == pytest.approx(
+        2 * uniform.t_gossip_step())
+
+
+def test_budget_currencies():
+    cm = unit_cost_model(TOPO, 1.0)
+    rc = cm.round_cost(4, 4)
+    assert rounds_within(Budget(wall_clock_s=80.0), rc) == 10
+    assert rounds_within(Budget(wire_bits=rc.wire_bits * 3.5), rc) == 3
+    # the tightest currency binds
+    assert rounds_within(Budget(wall_clock_s=80.0,
+                                wire_bits=rc.wire_bits * 3.5), rc) == 3
+    with pytest.raises(ValueError):
+        Budget()
+
+
+def test_plan_infeasible_budget_raises():
+    cm = unit_cost_model(TOPO, 1.0)
+    with pytest.raises(ValueError):
+        plan(Budget(wall_clock_s=0.5), cm, sigma=1.0, f_gap=1.0,
+             grid=[(4, 4)])
+
+
+# -- deprecation shim -------------------------------------------------------
+
+
+def test_metrics_shim_matches_planner_on_docstring_example():
+    from repro.core.metrics import comm_compute_cost as old
+    from repro.planner.cost import comm_compute_cost as new
+
+    kw = dict(step_flops=1e9, model_bytes=4e6, degree=2, flops_per_s=1e12,
+              link_bytes_per_s=1e9)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        got = old(4, 2, 10, **kw)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    want = new(4, 2, 10, **kw)
+    assert got == want
+    assert got["t_compute"] == pytest.approx(1e-3)
+    assert got["t_comm"] == pytest.approx(8e-3)
+
+
+# -- bounds library ---------------------------------------------------------
+
+
+def test_bounds_moved_and_reexported():
+    import benchmarks.theory_check as tc
+
+    assert tc.lr_condition_19 is bounds.lr_condition_19
+    assert tc.bound_20 is bounds.bound_20
+    assert tc.max_eta_19 is bounds.max_eta_19
+
+
+def test_predicted_loss_decrement_improves_with_iterations():
+    a = bounds.predicted_loss_decrement(4, 2, TOPO, 1.0, T=600, f_gap=1.0)
+    b = bounds.predicted_loss_decrement(4, 2, TOPO, 1.0, T=60, f_gap=1.0)
+    assert np.isfinite(a.bound) and a.bound < b.bound
+    assert bounds.lr_condition_19(a.eta, 4, 2, TOPO)
+    assert a.bound == pytest.approx(a.opt_term + a.stat_term + a.drift_term)
+
+
+def test_cdfl_constants():
+    topo = ring(8)
+    g = bounds.choco_gamma_star(topo, 0.5)
+    assert 0.0 < g < 1.0
+    c_full = bounds.cdfl_contraction(topo, 0.5)
+    c_half = bounds.cdfl_contraction(topo, 0.5, gamma=g / 2)
+    assert 0.0 < c_full < 1.0
+    assert c_full < c_half < 1.0          # less gamma -> slower consensus
+    # uncompressed mixing keeps the exact spectral zeta
+    assert bounds.effective_zeta(topo) == pytest.approx(topo.zeta)
+    # compression can never mix FASTER than uncompressed
+    z_comp = bounds.effective_zeta(topo, delta=0.25)
+    assert topo.zeta <= z_comp < 1.0
+    # perfect averaging degrades gracefully too
+    z_full = bounds.effective_zeta(fully_connected(8), delta=0.25)
+    assert 0.0 <= z_full < 1.0
+
+
+def test_plan_with_compression_candidates():
+    """With an expensive link, a compressed candidate can buy more rounds;
+    the chosen plan must at least not be worse in predicted bound than the
+    best uncompressed candidate."""
+    f_gap, sig_eff = _testbed_constants()
+    cm = unit_cost_model(TOPO, 25.0)
+    budget = Budget(wall_clock_s=cm.round_cost(2, 2).time_s * REF_ROUNDS)
+    p_plain = plan(budget, cm, sigma=sig_eff, f_gap=f_gap, grid=GRID)
+    p_comp = plan(budget, cm, sigma=sig_eff, f_gap=f_gap, grid=GRID,
+                  compressors=(None, QSGD(levels=16)))
+    assert p_comp.predicted_bound <= p_plain.predicted_bound
+    assert p_comp.compressor_name in ("none", "qsgd")
+
+
+def test_non_circulant_topology_priced():
+    """Cost model works for any topology (star has degree N-1 hub)."""
+    cm = CostModel(compute=ComputeModel(1e9, 1e12), link=LinkModel(1e9),
+                   topology=star(8), model_bits=32e6, engine="sparse")
+    assert cm.copies_per_step() == 7  # the hub's degree gates accounting
+
+
+# -- adaptive controller ----------------------------------------------------
+
+
+def _controller(ratio_prior, budget_s, replan_every=5):
+    cm = unit_cost_model(TOPO, ratio_prior)
+    f_gap, sig_eff = _testbed_constants()
+    return AdaptiveController(
+        Budget(wall_clock_s=budget_s), cm, sigma=sig_eff, f_gap=f_gap,
+        replan_every=replan_every, grid=GRID)
+
+
+def test_adaptive_refits_and_replans_to_true_costs():
+    """Prior says comm is cheap; measurements reveal comm 25x compute.
+    After replanning the controller must shift to a tau1-heavier schedule
+    and its fitted per-step times must match the true ones."""
+    t_step, t_gossip = 1.0, 25.0
+    ctrl = _controller(ratio_prior=0.2, budget_s=(2 + 2 * 25.0) * REF_ROUNDS)
+    p0 = ctrl.initial_plan()
+    rng = np.random.default_rng(0)
+    tau1, tau2 = p0.tau1, p0.tau2
+    for r in range(1, 16):
+        seconds = (tau1 * t_step + tau2 * t_gossip
+                   * (1 + 0.01 * rng.standard_normal()))
+        ctrl.observe(tau1, tau2, seconds)
+        new = ctrl.maybe_replan(r)
+        if new is not None:
+            tau1, tau2 = new.tau1, new.tau2
+    assert not ctrl.exhausted
+    last = ctrl.current
+    assert (last.tau1 / last.tau2) > (p0.tau1 / p0.tau2)
+    fitted = ctrl.fitted_cost_model()
+    assert fitted.compute.t_step == pytest.approx(t_step, rel=0.2)
+    assert fitted.t_gossip_step(None) == pytest.approx(t_gossip, rel=0.2)
+    # every (re)plan event is in the history with the schedule it chose
+    assert ctrl.history[0]["cause"] == "initial"
+    assert any(h["cause"] == "replan" for h in ctrl.history)
+    assert all({"round", "tau1", "tau2", "predicted_bound"} <= set(h)
+               for h in ctrl.history)
+
+
+def test_adaptive_rank_deficient_fallback_scales_prior():
+    """With all observations at one schedule the 2-unknown fit is rank-1:
+    the controller scales the prior uniformly instead of diverging."""
+    ctrl = _controller(ratio_prior=1.0, budget_s=1e6)
+    ctrl.initial_plan()
+    t1, t2 = ctrl.current.tau1, ctrl.current.tau2
+    prior_round = t1 * 1.0 + t2 * 1.0
+    for _ in range(6):
+        ctrl.observe(t1, t2, 10.0 * prior_round)   # 10x slower than prior
+    fitted = ctrl.fitted_cost_model()
+    assert fitted.compute.t_step == pytest.approx(10.0, rel=1e-6)
+    assert fitted.t_gossip_step(None) == pytest.approx(10.0, rel=1e-6)
+
+
+def test_adaptive_energy_budget_spend_down():
+    """An energy-only budget is spent down analytically per round and
+    triggers exhaustion; the fitted model keeps the energy prices."""
+    f_gap, sig_eff = _testbed_constants()
+    cm = CostModel(
+        compute=ComputeModel(step_flops=1.0, flops_per_s=1.0,
+                             joules_per_flop=2.0),
+        link=LinkModel(bytes_per_s=1.0, joules_per_byte=0.5),
+        topology=TOPO, model_bits=80.0)
+    per_round = {(t1, t2): cm.round_cost(t1, t2).energy_j for t1, t2 in GRID}
+    budget_j = 40.0 * min(per_round.values())
+    ctrl = AdaptiveController(Budget(energy_j=budget_j), cm, sigma=sig_eff,
+                              f_gap=f_gap, grid=GRID, replan_every=1)
+    p = ctrl.initial_plan()
+    r = 0
+    while not ctrl.exhausted and r < 500:
+        r += 1
+        ctrl.observe(p.tau1, p.tau2, 1.0)
+        new = ctrl.maybe_replan(r)
+        p = new or p
+    assert ctrl.exhausted and r < 500
+    assert ctrl.spent_j <= budget_j + max(per_round.values())
+    assert ctrl.spent_j >= budget_j - max(per_round.values())
+    # the measured-time refit must not drop the energy pricing
+    assert ctrl.fitted_cost_model().round_cost(2, 2).energy_j > 0.0
+
+
+def test_adaptive_budget_exhaustion():
+    ctrl = _controller(ratio_prior=1.0, budget_s=100.0, replan_every=1)
+    p = ctrl.initial_plan()
+    spent, r = 0.0, 0
+    while not ctrl.exhausted and r < 1000:
+        r += 1
+        ctrl.observe(p.tau1, p.tau2, 30.0)
+        spent += 30.0
+        ctrl.maybe_replan(r)
+    assert ctrl.exhausted
+    assert r < 1000
+    # stops once the remainder can't fund another planned round: within
+    # one round's cost of the envelope, never grossly over it.
+    assert 100.0 - 30.0 <= spent <= 100.0 + 30.0
+
+
+# -- launcher integration ---------------------------------------------------
+
+
+def test_train_cli_adaptive_session(tmp_path):
+    """`train.py --plan-budget` end-to-end: the controller plans, measures,
+    re-plans, and the (tau1, tau2) trajectory lands in the history JSON."""
+    from repro.launch import train as train_cli
+
+    out = tmp_path / "hist.json"
+    train_cli.main([
+        "--arch", "qwen3-1.7b", "--nodes", "2", "--rounds", "3",
+        "--batch", "1", "--seq", "16", "--plan-budget", "3600",
+        "--replan-every", "1", "--log-every", "10",
+        "--history-out", str(out)])
+    import json
+
+    h = json.loads(out.read_text())
+    assert len(h["round"]) == 3
+    assert len(h["tau1"]) == 3 and len(h["tau2"]) == 3
+    assert all(t >= 1 for t in h["tau1"])
+    events = h["plan_events"]
+    assert events[0]["cause"] == "initial"
+    assert any(e["cause"] == "replan" for e in events)
+    # re-planned schedules are the ones the rounds actually ran
+    assert (events[0]["tau1"], events[0]["tau2"]) == (h["tau1"][0],
+                                                     h["tau2"][0])
+
+
+def test_build_planned_round_smoke():
+    from repro.configs import REGISTRY
+    from repro.launch import steps as S
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(1, 1)
+    arch = REGISTRY["qwen3-1.7b"]
+    built = S.build_planned_round(arch, "train_4k", mesh, budget_s=3600.0,
+                                  reduced=True)
+    meta = built.meta["plan"]
+    assert meta["tau1"] >= 1 and meta["tau2"] >= 1
+    assert built.meta["tau1"] == meta["tau1"]
+    assert np.isfinite(meta["predicted_bound"])
+    assert built.lower() is not None

@@ -2,8 +2,9 @@
 import numpy as np
 import pytest
 
-from benchmarks.theory_check import check, lr_condition_19, max_eta_19
+from benchmarks.theory_check import check
 from repro.core.topology import fully_connected, ring
+from repro.planner.bounds import lr_condition_19, max_eta_19
 
 
 @pytest.mark.parametrize("tau1,tau2", [(4, 1), (4, 4), (8, 2)])
