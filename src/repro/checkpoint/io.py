@@ -75,5 +75,9 @@ def restore_checkpoint(directory: str, template: PyTree,
         if hasattr(tmpl, "shape") and tuple(arr.shape) != tuple(tmpl.shape):
             raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
                              f"template {tmpl.shape}")
+        if arr.dtype.kind == "V" and hasattr(tmpl, "dtype"):
+            # ml_dtypes leaves (bfloat16 & co) come back from .npz as raw
+            # void bytes; reinterpret via the template's dtype.
+            arr = arr.view(tmpl.dtype)
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -39,6 +39,12 @@ from repro.core.dfl import (
     round_wire_bits,
     sparse_engine_eligible,
 )
+from repro.core.executor import (
+    HostPrefetcher,
+    MetricsBuffer,
+    RoundExecutor,
+    stack_round_batches,
+)
 from repro.core.substrate import (
     DenseSubstrate,
     NodeSubstrate,
@@ -56,6 +62,8 @@ __all__ = [
     "sync_sgd_config", "replicate", "average_model", "consensus_distance",
     "init_state", "make_round_fn", "round_wire_bits",
     "sparse_engine_eligible",
+    "RoundExecutor", "HostPrefetcher", "MetricsBuffer",
+    "stack_round_batches",
     "NodeSubstrate", "DenseSubstrate", "ShardedSubstrate",
     "mixing", "metrics", "substrate",
 ]

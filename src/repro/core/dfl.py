@@ -189,7 +189,7 @@ def init_state(
 def _local_updates(
     cfg: DFLConfig, loss_fn: LossFn, opt, sub: NodeSubstrate,
     params: PyTree, opt_state: PyTree, local_key: jax.Array, batches: PyTree,
-    constrain,
+    constrain, tau1=None,
 ) -> Tuple[PyTree, PyTree, jnp.ndarray]:
     """tau1 per-node SGD steps (Alg. 1 l.4), engine-agnostic.
 
@@ -200,6 +200,13 @@ def _local_updates(
     updated params each step: without it GSPMD may resolve the scan carry /
     vmapped-grad shardings to replicated and all-gather entire stacked
     weight trees (observed: 200 GiB/device on phi3.5-moe).
+
+    ``tau1``: optional TRACED int32 step count (the dynamic-tau executor
+    path). The batch leading dim is then the compiled bound tau1_max
+    (= cfg.tau1) and only the first tau1 slices are read — a
+    ``fori_loop`` with a dynamic trip count, so re-planning tau1 never
+    retraces. ``None`` keeps the static ``scan`` (bit-identical legacy
+    path).
     """
     grad_one = jax.value_and_grad(loss_fn)
 
@@ -215,24 +222,56 @@ def _local_updates(
         params = constrain(params)
         return (params, opt_state), losses
 
-    (params, opt_state), losses = jax.lax.scan(
-        step, (params, opt_state), (batches, jnp.arange(cfg.tau1)))
-    mean_loss = sub.mean_over_nodes(jnp.mean(losses, axis=0))
+    if tau1 is None:
+        (params, opt_state), losses = jax.lax.scan(
+            step, (params, opt_state), (batches, jnp.arange(cfg.tau1)))
+        mean_loss = sub.mean_over_nodes(jnp.mean(losses, axis=0))
+        return params, opt_state, mean_loss
+
+    def batch_at(t):
+        return jax.tree_util.tree_map(
+            lambda b: jax.lax.dynamic_index_in_dim(b, t, keepdims=False),
+            batches)
+
+    # step 0 runs unconditionally (tau1 >= 1 by DFLConfig), which also
+    # yields the per-node loss accumulator's shape/dtype; the summation
+    # order (l_0 + l_1 + ...) matches the static path's axis-0 reduce, so
+    # dynamic and static rounds stay bitwise identical.
+    carry, loss_sum = step((params, opt_state),
+                           (batch_at(jnp.zeros((), jnp.int32)),
+                            jnp.zeros((), jnp.int32)))
+
+    def body(t, acc):
+        carry, loss_sum = acc
+        carry, losses = step(carry, (batch_at(t), t))
+        return carry, loss_sum + losses
+
+    (params, opt_state), loss_sum = jax.lax.fori_loop(
+        1, tau1, body, (carry, loss_sum))
+    mean_loss = sub.mean_over_nodes(
+        loss_sum / tau1.astype(loss_sum.dtype))
     return params, opt_state, mean_loss
 
 
 def _communicate_plain(cfg: DFLConfig, sub: NodeSubstrate, params: PyTree,
-                       round_idx=None) -> PyTree:
-    """tau2 uncompressed gossip steps (optionally round-varying topology)."""
-    if cfg.tau2 == 0:
+                       round_idx=None, tau2=None) -> PyTree:
+    """tau2 uncompressed gossip steps (optionally round-varying topology).
+
+    ``tau2``: optional TRACED int32 gossip count (dynamic-tau executor); the
+    ``fori_loop`` trip count is then a device scalar bounded by cfg.tau2
+    (the compiled maximum), so schedule changes never retrace. ``None``
+    keeps the static legacy path.
+    """
+    if tau2 is None and cfg.tau2 == 0:
         return params
+    t2 = cfg.tau2 if tau2 is None else tau2
     dense = isinstance(sub, DenseSubstrate)
     if cfg.topology_schedule:
         assert dense and cfg.mixing_impl == "dense", (
             "topology schedules use the dense engine's dense mixing")
         branches = [
             (lambda p, t=t: jax.lax.fori_loop(
-                0, cfg.tau2, lambda _, q: mixing_lib.mix_dense(q, t), p))
+                0, t2, lambda _, q: mixing_lib.mix_dense(q, t), p))
             for t in cfg.topology_schedule
         ]
         sel = (round_idx if round_idx is not None
@@ -240,20 +279,28 @@ def _communicate_plain(cfg: DFLConfig, sub: NodeSubstrate, params: PyTree,
         return jax.lax.switch(sel, branches, params)
     if cfg.mixing_impl == "dense_power":
         assert dense, "dense_power mixing is a dense-engine feature"
+        assert tau2 is None, (
+            "dense_power collapses tau2 into C^tau2 at trace time; dynamic "
+            "taus need iterated mixing (mixing_impl='dense')")
         return mixing_lib.mix_dense_power(params, cfg.topology, cfg.tau2)
     if cfg.mixing_impl != "dense":
         raise ValueError(f"unknown mixing_impl {cfg.mixing_impl!r}")
-    return jax.lax.fori_loop(0, cfg.tau2, lambda _, p: sub.mix(p), params)
+    return jax.lax.fori_loop(0, t2, lambda _, p: sub.mix(p), params)
 
 
 def _communicate_choco(
     cfg: DFLConfig, params: PyTree, hat: PyTree, rng: jax.Array,
-    sub: Optional[NodeSubstrate] = None,
+    sub: Optional[NodeSubstrate] = None, tau2=None,
 ) -> Tuple[PyTree, PyTree]:
     """tau2 CHOCO-G compressed gossip steps (Alg. 2 lines 6-11), shared by
     both engines: Y is mixed by ``sub.mix`` (dense einsum / ppermute), then
     x += gamma (C Y - Y), then Q(x - Y) updates Y — with per-node keys
-    fold_in(fold_in(rng, t), node) on either substrate."""
+    fold_in(fold_in(rng, t), node) on either substrate.
+
+    ``tau2``: optional TRACED int32 step count (dynamic-tau executor) —
+    the same iteration body runs under a dynamic-trip-count ``fori_loop``
+    instead of the static ``scan``, with identical per-step key folding.
+    """
     comp = cfg.compression
     assert comp is not None
     sub = sub if sub is not None else DenseSubstrate(cfg.topology)
@@ -265,11 +312,16 @@ def _communicate_choco(
         keys = sub.node_keys(jax.random.fold_in(rng, t))
         q = sub.vmap(lambda d, k: sub.compress(comp, d, k))(diff, keys)
         y_new = jax.tree_util.tree_map(lambda b, qq: b + qq, y, q)
-        return (x_new, y_new), None
+        return (x_new, y_new)
 
-    (params, hat), _ = jax.lax.scan(
-        one_step, (params, hat), jnp.arange(cfg.tau2)
-    )
+    if tau2 is None:
+        (params, hat), _ = jax.lax.scan(
+            lambda c, t: (one_step(c, t), None), (params, hat),
+            jnp.arange(cfg.tau2)
+        )
+        return params, hat
+    params, hat = jax.lax.fori_loop(
+        0, tau2, lambda t, c: one_step(c, t), (params, hat))
     return params, hat
 
 
@@ -284,19 +336,30 @@ def round_body(
     cfg: DFLConfig, loss_fn: LossFn, opt, sub: NodeSubstrate,
     params: PyTree, opt_state: PyTree, hat: Optional[PyTree],
     rng: jax.Array, round_idx, batches: PyTree, constrain=None,
+    taus: Optional[Tuple[jax.Array, jax.Array]] = None,
 ) -> Tuple[PyTree, PyTree, Optional[PyTree], dict]:
     """One full DFL/C-DFL round on either substrate: the single shared
-    implementation both engines execute."""
+    implementation both engines execute.
+
+    ``taus``: optional ``(tau1, tau2)`` TRACED int32 scalars — the
+    dynamic-tau executor path. ``cfg.tau1``/``cfg.tau2`` then act as the
+    compiled maxima (batch leading dim / loop bounds) and the scalars pick
+    the step counts actually run, so an adaptive re-plan changes them
+    without retracing. RNG folding and per-step arithmetic are identical to
+    the static path (bit-for-bit, tested in tests/test_executor.py).
+    """
     constrain = constrain or (lambda t: t)
+    tau1, tau2 = taus if taus is not None else (None, None)
     local_key, comm_key = round_keys(rng, round_idx)
     params, opt_state, mean_loss = _local_updates(
         cfg, loss_fn, opt, sub, params, opt_state, local_key, batches,
-        constrain)
+        constrain, tau1=tau1)
     if cfg.is_compressed:
         assert hat is not None, "C-DFL needs init_state(..., compressed=True)"
-        params, hat = _communicate_choco(cfg, params, hat, comm_key, sub)
+        params, hat = _communicate_choco(cfg, params, hat, comm_key, sub,
+                                         tau2=tau2)
     else:
-        params = _communicate_plain(cfg, sub, params, round_idx)
+        params = _communicate_plain(cfg, sub, params, round_idx, tau2=tau2)
         params = constrain(params)
     metrics = {
         "loss": mean_loss,
@@ -308,8 +371,8 @@ def round_body(
 def make_round_fn(
     cfg: DFLConfig, loss_fn: LossFn, opt, constrain=None, *,
     engine: str = "dense", mesh=None, node_axes: Sequence[str] = ("data",),
-    use_kernels: bool = False,
-) -> Callable[[DFLState, PyTree], Tuple[DFLState, dict]]:
+    use_kernels: bool = False, dynamic_taus: bool = False,
+) -> Callable[..., Tuple[DFLState, dict]]:
     """Build the jittable one-round function for either engine.
 
     round_fn(state, batches) -> (state', metrics); batches leaves
@@ -326,7 +389,18 @@ def make_round_fn(
     ppermute; needs ``mesh`` whose ``node_axes`` enumerate all N nodes and
     a shift-structured topology), or "auto" (sparse when eligible).
     ``use_kernels`` routes the sparse hot path through the Pallas kernels.
+
+    ``dynamic_taus``: the returned function is
+    round_fn(state, batches, tau1, tau2) with DEVICE-SCALAR step counts;
+    cfg.tau1/cfg.tau2 become the compiled maxima (batches carry
+    [cfg.tau1, ...] leading dims, only the first tau1 slices are read).
+    One compile covers every (tau1, tau2) <= the maxima — the
+    recompile-free hot path behind ``repro.core.executor``.
     """
+    if dynamic_taus and cfg.mixing_impl == "dense_power":
+        raise ValueError(
+            "dynamic taus need iterated mixing: dense_power bakes C^tau2 in "
+            "at trace time (use mixing_impl='dense')")
     if engine == "auto":
         engine = "sparse" if sparse_engine_eligible(
             cfg, mesh, node_axes) else "dense"
@@ -336,19 +410,30 @@ def make_round_fn(
         assert mesh is not None, "sparse engine needs a mesh"
         return make_sharded_round_fn(cfg, loss_fn, opt, mesh,
                                      node_axes=node_axes,
-                                     use_kernels=use_kernels)
+                                     use_kernels=use_kernels,
+                                     dynamic_taus=dynamic_taus)
     if engine != "dense":
         raise ValueError(f"unknown engine {engine!r}")
     sub = DenseSubstrate(cfg.topology)
 
-    def round_fn(state: DFLState, batches: PyTree):
+    def body(state: DFLState, batches: PyTree, taus):
         params, opt_state, hat, metrics = round_body(
             cfg, loss_fn, opt, sub, state.params, state.opt_state,
-            state.hat_params, state.rng, state.round_idx, batches, constrain)
+            state.hat_params, state.rng, state.round_idx, batches, constrain,
+            taus=taus)
         state = state._replace(
             params=params, opt_state=opt_state, hat_params=hat,
             round_idx=state.round_idx + 1)
         return state, metrics
+
+    if dynamic_taus:
+        def round_fn(state: DFLState, batches: PyTree, tau1, tau2):
+            return body(state, batches,
+                        (jnp.asarray(tau1, jnp.int32),
+                         jnp.asarray(tau2, jnp.int32)))
+    else:
+        def round_fn(state: DFLState, batches: PyTree):
+            return body(state, batches, None)
 
     return round_fn
 

@@ -1,0 +1,336 @@
+"""Recompile-free fused round executor: the DFL hot-loop dispatcher.
+
+The paper's balancing result only pays off if *changing* the (tau1, tau2)
+schedule is cheap; resource-constrained DFL work (Yan & Li 2023) wants it
+re-planned per round. Before this module, every adaptive re-plan rebuilt and
+re-jitted the round function (tau1/tau2 were static scan lengths), so the
+controller had to discard compile-contaminated rounds. The executor makes
+schedule changes and round dispatch near-zero-cost:
+
+* **Dynamic taus** — one compile of ``round_body`` with (tau1, tau2) as
+  device scalars (``make_round_fn(..., dynamic_taus=True)``): bounded loops
+  over the (tau1_max, tau2_max) maxima with dynamic trip counts. Any
+  schedule within the maxima dispatches against the same executable; a
+  re-plan never retraces (asserted via the trace counter below).
+* **Fused supersteps** — a jitted ``lax.scan`` over K rounds with the
+  ``DFLState`` carry DONATED (params+opt buffers reused in place, halving
+  peak state memory vs. the undonated per-round jit) and on-device stacked
+  metrics, so the host syncs once per superstep instead of once per round.
+* **Overlap** — ``HostPrefetcher`` builds the next superstep's batches on a
+  background thread while the device runs, and ``MetricsBuffer`` defers the
+  host-blocking metric fetch to log boundaries.
+
+A keyed compile cache (``dynamic=False``) remains as the static fallback for
+configs the dynamic path can't express (``mixing_impl='dense_power'``).
+
+Numerics: a dynamic-tau round is bit-identical to the static round in model
+state (params / opt_state / hat_params / consensus metric); the scalar loss
+METRIC may differ by ~1 ulp because XLA associates the tau1-length and
+tau1_max-length loss reductions differently (tests/test_executor.py pins
+both properties).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dfl import DFLConfig, DFLState, make_round_fn
+
+PyTree = Any
+
+__all__ = ["RoundExecutor", "HostPrefetcher", "MetricsBuffer",
+           "stack_round_batches"]
+
+
+def stack_round_batches(round_batches: Sequence[PyTree],
+                        tau1_max: int) -> PyTree:
+    """Stack K per-round batch trees (leaves [tau1, ...]) into superstep
+    form (leaves [K, tau1_max, ...]), zero-padding rows >= tau1.
+
+    The padding rows are never read by the dynamic-trip-count loops — they
+    only exist so every dispatch shares one compiled shape.
+    """
+    assert round_batches, "need at least one round of batches"
+
+    def one(*leaves):
+        leaves = [np.asarray(x) for x in leaves]
+        k = len(leaves)
+        tail = leaves[0].shape[1:]
+        out = np.zeros((k, tau1_max) + tail, leaves[0].dtype)
+        for i, x in enumerate(leaves):
+            assert x.shape[0] <= tau1_max, (
+                f"round batch has {x.shape[0]} steps > tau1_max={tau1_max}")
+            out[i, :x.shape[0]] = x
+        return jnp.asarray(out)
+
+    return jax.tree_util.tree_map(one, *round_batches)
+
+
+class RoundExecutor:
+    """Compile-once dispatch of DFL rounds and K-round supersteps.
+
+    Args:
+      cfg: the DFL config whose ``tau1``/``tau2`` are the compiled MAXIMA in
+        dynamic mode (any dispatched schedule must satisfy
+        1 <= tau1 <= cfg.tau1, 0 <= tau2 <= cfg.tau2) and defaults in static
+        mode.
+      loss_fn, opt, constrain, engine, mesh, node_axes, use_kernels:
+        forwarded to ``core.dfl.make_round_fn``.
+      dynamic: True (default) compiles the dynamic-tau round once; False is
+        the keyed static fallback — one compile per distinct (tau1, tau2),
+        cached.
+      donate: donate the DFLState argument of every dispatch (the caller
+        must treat the passed-in state as consumed).
+
+    ``dispatch(state, batches, tau1, tau2)`` runs one superstep: batches
+    leaves are [K, tau1_max, ...] (dynamic) / [K, tau1, ...]-compatible
+    (static mode slices the padded rows off), K inferred from the leading
+    dim; returns ``(state', metrics)`` with metrics leaves stacked [K].
+    ``compile_count`` counts traces of the superstep — the zero-recompile
+    assertion hook for tests and benchmarks.
+    """
+
+    def __init__(
+        self,
+        cfg: DFLConfig,
+        loss_fn,
+        opt,
+        *,
+        constrain=None,
+        engine: str = "dense",
+        mesh=None,
+        node_axes: Sequence[str] = ("data",),
+        use_kernels: bool = False,
+        dynamic: bool = True,
+        donate: bool = True,
+    ):
+        self.cfg = cfg
+        self.dynamic = dynamic
+        self.donate = donate
+        self._make_kw = dict(
+            constrain=constrain, engine=engine, mesh=mesh,
+            node_axes=tuple(node_axes), use_kernels=use_kernels)
+        self._loss_fn = loss_fn
+        self._opt = opt
+        self._trace_count = 0
+        self.dispatch_count = 0
+        self.rounds_dispatched = 0
+        self._static_cache: Dict[Tuple[int, int], Callable] = {}
+        if dynamic:
+            round_fn = make_round_fn(cfg, loss_fn, opt, dynamic_taus=True,
+                                     **self._make_kw)
+
+            def superstep(state: DFLState, batches: PyTree, tau1, tau2):
+                self._trace_count += 1  # fires per trace == per compile
+
+                def body(st, b):
+                    return round_fn(st, b, tau1, tau2)
+
+                return jax.lax.scan(body, state, batches)
+
+            self._dynamic_fn = jax.jit(
+                superstep, donate_argnums=(0,) if donate else ())
+
+    # -- properties --------------------------------------------------------
+
+    @property
+    def tau1_max(self) -> int:
+        return self.cfg.tau1
+
+    @property
+    def tau2_max(self) -> int:
+        return self.cfg.tau2
+
+    @property
+    def compile_count(self) -> int:
+        """Number of XLA compilations this executor has triggered (a jit
+        cache hit does not retrace, so a steady count across re-plans IS the
+        recompile-free property)."""
+        return self._trace_count
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _check_taus(self, tau1: int, tau2: int) -> Tuple[int, int]:
+        tau1, tau2 = int(tau1), int(tau2)
+        if not 1 <= tau1 <= self.tau1_max:
+            raise ValueError(
+                f"tau1={tau1} outside compiled bounds [1, {self.tau1_max}]; "
+                "rebuild the executor with a larger tau1_max")
+        if not 0 <= tau2 <= self.tau2_max:
+            raise ValueError(
+                f"tau2={tau2} outside compiled bounds [0, {self.tau2_max}]; "
+                "rebuild the executor with a larger tau2_max")
+        return tau1, tau2
+
+    def _static_fn(self, tau1: int, tau2: int) -> Callable:
+        key = (tau1, tau2)
+        fn = self._static_cache.get(key)
+        if fn is None:
+            import dataclasses
+
+            cfg = dataclasses.replace(self.cfg, tau1=tau1, tau2=tau2)
+            round_fn = make_round_fn(cfg, self._loss_fn, self._opt,
+                                     **self._make_kw)
+
+            def superstep(state: DFLState, batches: PyTree):
+                self._trace_count += 1
+
+                return jax.lax.scan(round_fn, state, batches)
+
+            fn = jax.jit(superstep,
+                         donate_argnums=(0,) if self.donate else ())
+            self._static_cache[key] = fn
+        return fn
+
+    def dispatch(self, state: DFLState, batches: PyTree, tau1: int,
+                 tau2: int) -> Tuple[DFLState, dict]:
+        """One K-round fused superstep (K = batches' leading dim)."""
+        tau1, tau2 = self._check_taus(tau1, tau2)
+        k = jax.tree_util.tree_leaves(batches)[0].shape[0]
+        self.dispatch_count += 1
+        self.rounds_dispatched += k
+        if self.dynamic:
+            return self._dynamic_fn(state, batches, jnp.int32(tau1),
+                                    jnp.int32(tau2))
+        # static fallback: drop the padding rows the dynamic layout carries.
+        sliced = jax.tree_util.tree_map(lambda b: b[:, :tau1], batches)
+        return self._static_fn(tau1, tau2)(state, sliced)
+
+    def dispatch_round(self, state: DFLState, batches: PyTree, tau1: int,
+                       tau2: int) -> Tuple[DFLState, dict]:
+        """Single-round convenience: batches leaves [tau1_max, ...];
+        returns per-round (unstacked) metrics."""
+        add_k = lambda t: jax.tree_util.tree_map(lambda x: x[None], t)
+        state, metrics = self.dispatch(state, add_k(batches), tau1, tau2)
+        return state, jax.tree_util.tree_map(lambda m: m[0], metrics)
+
+    def warmup(self, state: DFLState, batches: PyTree,
+               tau1: int = 1, tau2: int = 0) -> None:
+        """Pay the trace+compile for this batch SHAPE (and, in static mode,
+        this (tau1, tau2) key) before any measured dispatch, on a throwaway
+        copy of ``state`` (donation consumes it) — on this jaxlib the CPU
+        client executes synchronously inside ``dispatch``, so a compile
+        occurring there would otherwise contaminate the measured window of
+        whatever round runs first at that shape (AOT ``lower().compile()``
+        does not populate the jit call cache on the 0.4.37 pin, hence a
+        real dummy dispatch). Dynamic mode compiles one executable per
+        shape, so the default minimal schedule (1, 0) is enough; static
+        mode must warm every (tau1, tau2) it will dispatch. Dispatch
+        statistics are left untouched."""
+        dummy = jax.tree_util.tree_map(jnp.copy, state)
+        n_dispatch, n_rounds = self.dispatch_count, self.rounds_dispatched
+        out = self.dispatch(dummy, batches, tau1, tau2)
+        jax.block_until_ready(out)
+        self.dispatch_count, self.rounds_dispatched = n_dispatch, n_rounds
+
+
+class HostPrefetcher:
+    """Double-buffered host batch prefetch.
+
+    ``schedule(fn, *args, meta=...)`` starts building the NEXT superstep's
+    batches on a daemon thread while the device executes the current one;
+    ``take()`` joins and returns ``(result, meta)``. The ``meta`` tag (e.g.
+    ``(round0, k, tau1)``) lets the caller detect a stale prefetch after a
+    re-plan changed the schedule and rebuild inline — re-plans are rare, so
+    at most one chunk is ever discarded.
+    """
+
+    def __init__(self):
+        self._pending: Optional[Tuple[threading.Thread, dict, Any]] = None
+
+    def schedule(self, fn: Callable, *args, meta: Any = None) -> None:
+        assert self._pending is None, "previous prefetch not taken"
+        box: dict = {}
+
+        def work():
+            try:
+                box["out"] = fn(*args)
+            except BaseException as e:  # re-raised on take()
+                box["err"] = e
+
+        t = threading.Thread(target=work, daemon=True)
+        t.start()
+        self._pending = (t, box, meta)
+
+    @property
+    def pending_meta(self) -> Any:
+        return self._pending[2] if self._pending is not None else None
+
+    def take(self) -> Tuple[Any, Any]:
+        assert self._pending is not None, "nothing scheduled"
+        t, box, meta = self._pending
+        self._pending = None
+        t.join()
+        if "err" in box:
+            raise box["err"]
+        return box["out"], meta
+
+    def cancel(self) -> None:
+        """Discard a stale prefetch (joins the worker; a build error in
+        data that will never be used is dropped, not re-raised)."""
+        if self._pending is not None:
+            try:
+                self.take()
+            except BaseException:
+                pass
+
+
+class MetricsBuffer:
+    """On-device stacked round metrics, host-materialized only on flush.
+
+    ``push`` records a dispatched superstep's device metrics WITHOUT
+    blocking; ``flush`` calls ``jax.block_until_ready`` once (at a log /
+    checkpoint / re-plan boundary), converts to per-round host rows, and
+    amortizes the measured wall-clock since the window opened over the
+    rounds it covered (per-round dispatch would instead pay one sync per
+    round).
+
+    ``dispatched_at``: pass ``time.time()`` taken BEFORE the dispatch call.
+    On synchronous backends (this jaxlib's CPU client) the superstep
+    EXECUTES inside ``dispatch``, so a window opened at push time would
+    measure ~zero; the pre-dispatch stamp of the window's first chunk is
+    the correct wall-clock origin on sync and async backends both. It also
+    means a compile occurring inside a dispatch lands in that window —
+    warm every batch shape up front (see ``launch.train``) so measured
+    rounds stay compile-free.
+    """
+
+    def __init__(self):
+        self._pending: List[Tuple[int, int, int, int, dict]] = []
+        self._window_start: Optional[float] = None
+
+    def push(self, round0: int, k: int, tau1: int, tau2: int,
+             metrics: dict, dispatched_at: Optional[float] = None) -> None:
+        if self._window_start is None:
+            self._window_start = (dispatched_at if dispatched_at is not None
+                                  else time.time())
+        self._pending.append((round0, k, tau1, tau2, metrics))
+
+    @property
+    def pending_rounds(self) -> int:
+        return sum(k for _, k, _, _, _ in self._pending)
+
+    def flush(self) -> List[dict]:
+        """Block once; return one row per completed round, in order."""
+        if not self._pending:
+            return []
+        jax.block_until_ready([m for *_, m in self._pending])
+        elapsed = time.time() - (self._window_start or time.time())
+        n = self.pending_rounds
+        per_round_s = elapsed / max(n, 1)
+        rows: List[dict] = []
+        for round0, k, tau1, tau2, metrics in self._pending:
+            host = {key: np.asarray(v) for key, v in metrics.items()}
+            for i in range(k):
+                row = {key: float(v[i]) for key, v in host.items()}
+                row.update(round=round0 + i, tau1=tau1, tau2=tau2,
+                           round_s=per_round_s)
+                rows.append(row)
+        self._pending = []
+        self._window_start = None
+        return rows

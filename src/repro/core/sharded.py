@@ -31,6 +31,7 @@ from __future__ import annotations
 from typing import Any, Callable, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import substrate as substrate_lib
 from repro.core.dfl import DFLConfig, DFLState, round_body
@@ -47,9 +48,17 @@ def make_sharded_round_fn(
     *,
     node_axes: Sequence[str] = ("data",),
     use_kernels: bool = False,
-) -> Callable[[DFLState, PyTree], Tuple[DFLState, dict]]:
+    dynamic_taus: bool = False,
+) -> Callable[..., Tuple[DFLState, dict]]:
     """Sparse-gossip round; call under jax.jit. State leaves carry the
-    stacked node dim sharded over ``node_axes`` (local size 1)."""
+    stacked node dim sharded over ``node_axes`` (local size 1).
+
+    ``dynamic_taus``: round_fn(state, batches, tau1, tau2) with replicated
+    int32 step-count scalars riding through the shard_map boundary;
+    cfg.tau1/cfg.tau2 are the compiled maxima (see core.dfl.make_round_fn).
+    The trip counts are identical on every node shard, so the per-shift
+    ppermutes inside the dynamic while-loops stay collectively matched.
+    """
     from jax.sharding import PartitionSpec as P
 
     import numpy as np
@@ -73,7 +82,7 @@ def make_sharded_round_fn(
     )
     batch_spec = P(None, node_entry)
 
-    def body(state: DFLState, batches: PyTree):
+    def body(state: DFLState, batches: PyTree, taus=None):
         # local leaves: params [1, ...]; batches [tau1, 1, B, ...]
         squeeze = lambda t: jax.tree_util.tree_map(lambda x: x[0], t)
         unsqueeze = lambda t: jax.tree_util.tree_map(lambda x: x[None], t)
@@ -85,7 +94,8 @@ def make_sharded_round_fn(
             squeeze(state.hat_params) if cfg.is_compressed else None,
             state.rng, state.round_idx,
             # drop the local (size-1) node dim, keeping the leading tau1 dim
-            jax.tree_util.tree_map(lambda x: x[:, 0], batches))
+            jax.tree_util.tree_map(lambda x: x[:, 0], batches),
+            taus=taus)
         new_state = DFLState(
             params=unsqueeze(params),
             opt_state=unsqueeze(opt_state),
@@ -95,15 +105,28 @@ def make_sharded_round_fn(
         )
         return new_state, metrics
 
-    in_specs = (state_specs, batch_spec)
     # The base PRNG key never advances (the folding discipline derives all
     # keys from round_idx), so it is NOT returned through the shard_map
     # boundary: XLA rejects partially-manual shardings on the typed key's
     # trailing u32[2] layout. It rides through as None and is re-attached.
     out_specs = (state_specs._replace(rng=None), P())
 
+    if dynamic_taus:
+        mapped = substrate_lib.shard_map(
+            lambda st, b, t1, t2: body(st, b, (t1, t2)),
+            mesh, (state_specs, batch_spec, P(), P()), out_specs,
+            manual_axes=tuple(node_axes), check=False)
+
+        def round_fn(state: DFLState, batches: PyTree, tau1, tau2):
+            new_state, metrics = mapped(
+                state, batches, jnp.asarray(tau1, jnp.int32),
+                jnp.asarray(tau2, jnp.int32))
+            return new_state._replace(rng=state.rng), metrics
+
+        return round_fn
+
     mapped = substrate_lib.shard_map(
-        body, mesh, in_specs, out_specs,
+        body, mesh, (state_specs, batch_spec), out_specs,
         manual_axes=tuple(node_axes), check=False)
 
     def round_fn(state: DFLState, batches: PyTree):

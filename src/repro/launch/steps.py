@@ -330,6 +330,78 @@ def build_train_round(
     }, ctx=_act_policy(mesh, mode, "train"))
 
 
+def build_train_superstep(
+    arch: ArchConfig,
+    shape_name: str,
+    mesh: Mesh,
+    *,
+    rounds: int = 4,
+    tau1_max: int = 8,
+    tau2_max: int = 8,
+    compression: Optional[Compressor] = None,
+    topology: str = "ring",
+    lr: float = 1e-3,
+    reduced: bool = False,
+    engine: str = "auto",
+    use_kernels: bool = False,
+) -> Built:
+    """The fused K-round superstep as a lowerable production artifact.
+
+    One executable covers EVERY (tau1, tau2) <= (tau1_max, tau2_max): the
+    step counts are replicated int32 device scalars
+    (``make_round_fn(dynamic_taus=True)``), the K rounds run as a
+    ``lax.scan`` whose ``DFLState`` carry is DONATED (params+opt buffers
+    aliased in place — the peak-memory fix the per-round jit was missing),
+    and the per-round metrics come back stacked [K] so the host syncs once
+    per superstep. Batch leaves are [K, tau1_max, N, B, ...] with rows >=
+    tau1 never read. This is the compile-proof artifact of what
+    ``repro.core.executor.RoundExecutor`` dispatches at runtime.
+    """
+    cfg = arch.reduced if reduced else arch.model
+    shape = SHAPES[shape_name]
+    mode, n, dcfg = dfl_setup(arch, mesh, tau1=tau1_max, tau2=tau2_max,
+                              compression=compression,
+                              mixing_impl="dense", topology=topology)
+    opt = sgd(lr)
+    loss_fn = lambda p, b, k: tf_lib.train_loss(p, b, cfg, k)
+    state_abs, state_sh, _ = _abstract_state(
+        arch, cfg, mesh, mode, n, opt, compressed=dcfg.is_compressed)
+    constrain = _make_constrain(state_sh.params)
+    engine = select_engine(engine, dcfg, mesh, mode)
+    round_fn = dfl_lib.make_round_fn(
+        dcfg, loss_fn, opt, constrain=constrain, engine=engine, mesh=mesh,
+        node_axes=shard_lib.node_axes_for(mode, mesh),
+        use_kernels=use_kernels, dynamic_taus=True)
+
+    def superstep(state, batches, tau1, tau2):
+        def body(st, b):
+            return round_fn(st, b, tau1, tau2)
+
+        return jax.lax.scan(body, state, batches)
+
+    batch_abs, batch_sh = _abstract_batch(arch, cfg, shape, mesh, mode, n,
+                                          tau1_max)
+    # prepend the K (rounds) dim: replicated, like the tau1 dim.
+    batch_abs = {k: jax.ShapeDtypeStruct((rounds,) + v.shape, v.dtype)
+                 for k, v in batch_abs.items()}
+    batch_sh = {k: NamedSharding(mesh, P(None, *sh.spec))
+                for k, sh in batch_sh.items()}
+    tau_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = jax.jit(
+        superstep,
+        in_shardings=(state_sh, batch_sh, shard_lib.replicated(mesh),
+                      shard_lib.replicated(mesh)),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,),
+    )
+    return Built(fn, (state_abs, batch_abs, tau_abs, tau_abs), {
+        "kind": "superstep", "arch": arch.arch_id, "shape": shape_name,
+        "mode": mode, "nodes": n, "rounds": rounds,
+        "tau1_max": tau1_max, "tau2_max": tau2_max, "engine": engine,
+        "compressed": dcfg.is_compressed,
+    }, ctx=_act_policy(mesh, mode, "train"))
+
+
 def build_local_step(
     arch: ArchConfig, shape_name: str, mesh: Mesh, *,
     lr: float = 1e-3, reduced: bool = False,

@@ -13,34 +13,48 @@ engine; "sparse" forces it (errors if ineligible); "dense" forces the
 reference path. --use-kernels routes the sparse hot path through the
 Pallas kernels (interpret mode off-TPU).
 
+Dispatch (--dispatch, --superstep): the hot loop runs on
+``repro.core.executor.RoundExecutor``. "fused" (default) compiles ONE
+dynamic-(tau1, tau2) round executable and dispatches --superstep rounds per
+call as a donated-carry ``lax.scan`` — schedule changes never recompile,
+and the host syncs with the device once per superstep (logging, checkpoints
+and re-plans all happen at superstep boundaries). "static" is the legacy
+keyed-compile-cache fallback: one compile per distinct (tau1, tau2).
+Next-superstep batches are prefetched on a background thread while the
+device runs.
+
 Adaptive planning (--plan-budget SECONDS): hands (tau1, tau2) control to
 ``repro.planner.adaptive``. The controller plans the first schedule from a
 neutral cost prior, measures real round wall-clock, re-fits per-step
 compute/gossip times, and re-plans every --replan-every rounds until the
 budget is spent; the schedule trajectory lands in the history JSON
-(--history-out).
+(--history-out). With the fused executor a re-plan is just two new device
+scalars, so no round is ever compile-contaminated and every measured round
+enters the controller's cost fit.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import get_arch, list_archs
-from repro.core import (DFLConfig, average_model, init_state,
-                        make_compressor, make_round_fn, ring,
+from repro.core import (DFLConfig, HostPrefetcher, MetricsBuffer,
+                        RoundExecutor, init_state, make_compressor, ring,
                         round_wire_bits, sparse_engine_eligible,
-                        fully_connected, paper_quasi_ring)
+                        stack_round_batches, fully_connected,
+                        paper_quasi_ring)
 from repro.core.compression import Identity, tree_wire_bits
 from repro.data.lm import SyntheticLM, lm_batches_for_dfl
 from repro.models import train_loss, init_params
 from repro.optim import sgd, momentum_sgd, adamw
 from repro.planner import AdaptiveController, Budget, unit_cost_model
+from repro.planner.optimize import DEFAULT_GRID
 
 
 def make_topology(name: str, n: int):
@@ -85,6 +99,13 @@ def main(argv=None) -> None:
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=1)
+    ap.add_argument("--superstep", type=int, default=4,
+                    help="rounds fused into one dispatch (K); logging / "
+                         "checkpoint / re-plan granularity")
+    ap.add_argument("--dispatch", default="fused",
+                    choices=["fused", "static"],
+                    help="fused: compile-once dynamic-tau executor; "
+                         "static: legacy keyed per-(tau1,tau2) compile cache")
     ap.add_argument("--plan-budget", type=float, default=0.0,
                     help="wall-clock budget (s); enables the adaptive "
                          "(tau1, tau2) planner (repro.planner.adaptive)")
@@ -121,23 +142,6 @@ def main(argv=None) -> None:
     if args.engine != "dense" and len(jax.devices()) == n:
         mesh = jax.make_mesh((n,), ("nodes",))
 
-    def build(tau1: int, tau2: int):
-        """(dcfg, jitted round_fn, engine) for one (tau1, tau2) schedule."""
-        dcfg = DFLConfig(tau1=tau1, tau2=tau2, topology=topology,
-                         compression=comp, gamma=args.gamma)
-        eligible = (mesh is not None
-                    and sparse_engine_eligible(dcfg, mesh, ("nodes",)))
-        if args.engine == "sparse" and not eligible:
-            raise SystemExit(
-                "sparse engine needs #devices == --nodes and a circulant "
-                f"topology (devices={len(jax.devices())}, nodes={n}, "
-                f"topology={dcfg.topology.name})")
-        engine = "sparse" if (args.engine != "dense" and eligible) else "dense"
-        round_fn = jax.jit(make_round_fn(
-            dcfg, loss_fn, opt, engine=engine, mesh=mesh,
-            node_axes=("nodes",), use_kernels=args.use_kernels))
-        return dcfg, round_fn, engine
-
     # Adaptive planner: --plan-budget hands (tau1, tau2) control to
     # repro.planner.adaptive, which re-fits per-step compute/gossip times
     # from measured round wall-clock and re-plans every --replan-every
@@ -160,57 +164,184 @@ def main(argv=None) -> None:
               f"{args.plan_budget:.1f}s (predicted bound "
               f"{p.predicted_bound:.4f})")
 
-    dcfg, round_fn, engine = build(tau1, tau2)
+    # The executor compiles ONCE against the (tau1_max, tau2_max) bounds:
+    # with a planner those are the schedule grid's maxima so any re-plan
+    # dispatches against the same executable; without, the CLI taus.
+    if controller is not None:
+        tau1_max = max(max(t1 for t1, _ in DEFAULT_GRID), tau1)
+        tau2_max = max(max(t2 for _, t2 in DEFAULT_GRID), tau2)
+    else:
+        tau1_max, tau2_max = tau1, tau2
+    dcfg_max = DFLConfig(tau1=tau1_max, tau2=tau2_max, topology=topology,
+                         compression=comp, gamma=args.gamma)
+    eligible = (mesh is not None
+                and sparse_engine_eligible(dcfg_max, mesh, ("nodes",)))
+    if args.engine == "sparse" and not eligible:
+        raise SystemExit(
+            "sparse engine needs #devices == --nodes and a circulant "
+            f"topology (devices={len(jax.devices())}, nodes={n}, "
+            f"topology={topology.name})")
+    engine = "sparse" if (args.engine != "dense" and eligible) else "dense"
+    executor = RoundExecutor(
+        dcfg_max, loss_fn, opt, engine=engine, mesh=mesh,
+        node_axes=("nodes",), use_kernels=args.use_kernels,
+        dynamic=args.dispatch == "fused")
+
     # Wire accounting is DEPLOYMENT cost (what a real DFL network ships:
     # engine="auto" = per-neighbor when circulant), not the host-simulation
     # engine's, so the printed MB/round is host-device-count independent
     # and comparable with benchmarks/common.py.
-    bits = round_wire_bits(dcfg, params0, engine="auto")
+    import dataclasses as _dc
+    bits = round_wire_bits(_dc.replace(dcfg_max, tau1=tau1, tau2=tau2),
+                           params0, engine="auto")
     print(f"arch={cfg.name} nodes={n} tau=({tau1},{tau2}) "
-          f"zeta={dcfg.topology.zeta:.3f} comp={args.compression or 'none'} "
-          f"engine={engine} wire={bits/8e6:.1f} MB/round/node")
+          f"zeta={topology.zeta:.3f} comp={args.compression or 'none'} "
+          f"engine={engine} dispatch={args.dispatch} "
+          f"superstep={args.superstep} wire={bits/8e6:.1f} MB/round/node")
+
+    def round_batch(r: int, t1: int):
+        """One round's [t1, N, B, ...] batch tree (same data stream the
+        legacy per-round loop fetched)."""
+        b = dict(lm_batches_for_dfl(corpus, t1, n, args.batch, args.seq, r))
+        if cfg.has_memory_input:
+            m = cfg.memory_tokens or 16
+            key = jax.random.key(1000 + r)
+            b["memory"] = jax.random.normal(
+                key, (t1, n, args.batch, m, cfg.memory_dim or cfg.d_model),
+                jnp.float32)
+        return b
+
+    def build_batches(r0: int, k: int, t1: int):
+        """[k, tau1_max, N, B, ...] superstep batches for rounds
+        r0..r0+k-1 (rows >= t1 zero-padded, never read)."""
+        return stack_round_batches([round_batch(r0 + i, t1)
+                                    for i in range(k)], tau1_max)
+
+    def dummy_batches(k: int):
+        """Zeros in the superstep batch shape — executor warmup only."""
+        zero = jax.tree_util.tree_map(jnp.zeros_like, round_batch(0, 1))
+        return stack_round_batches([zero] * k, tau1_max)
+
+    end = start_round + args.rounds
+
+    def chunk_len(r: int, rounds_done: int) -> int:
+        k = min(max(args.superstep, 1), end - r)
+        if controller is not None:
+            # cut at re-plan boundaries so rounds_done % replan_every == 0
+            # lands exactly at a superstep edge.
+            to_replan = args.replan_every - rounds_done % args.replan_every
+            k = min(k, to_replan)
+        return k
+
+    # Warm every superstep shape the run will dispatch (the chunk-length
+    # sequence is deterministic in (rounds, superstep, replan boundaries))
+    # with a throwaway dummy dispatch, so no MEASURED round ever contains a
+    # trace/compile: that is what lets every observed round enter the
+    # controller's cost fit. The static fallback compiles per (tau1, tau2)
+    # key, so it re-warms after every re-plan (one dummy superstep of
+    # compute instead of a contaminated measurement).
+    def remaining_chunk_lens(rr: int, done: int):
+        """Distinct superstep sizes the run will still dispatch from round
+        rr (deterministic in (rounds, superstep, replan boundaries))."""
+        ks = set()
+        while rr < end:
+            kk = chunk_len(rr, done)
+            ks.add(kk)
+            rr += kk
+            done += kk
+        return sorted(ks, reverse=True)
+
+    def warm_executables(ks, t1: int, t2: int) -> None:
+        """Pre-pay compiles on dummy data so no MEASURED round contains
+        one. Fused compiles per SHAPE only (the schedule args are
+        irrelevant — one executable serves every (tau1, tau2)); static
+        compiles per (shape, (tau1, tau2)) key. Warmup wall-clock is real
+        budget spend and is charged to the controller, but never enters
+        the per-round cost fit."""
+        tw0 = time.time()
+        before = executor.compile_count
+        for kk in ks:
+            if args.dispatch == "fused":
+                executor.warmup(state, dummy_batches(kk))
+            else:
+                executor.warmup(state, dummy_batches(kk), t1, t2)
+        if executor.compile_count > before:
+            print(f"warmed {executor.compile_count - before} superstep "
+                  f"executable(s) in {time.time()-tw0:.1f}s")
+        if controller is not None:
+            controller.spend_overhead(time.time() - tw0)
+
+    if args.rounds > 0:
+        warm_executables(remaining_chunk_lens(start_round, 0), tau1, tau2)
+    compiles_after_warmup = executor.compile_count
 
     history = {"round": [], "loss": [], "consensus_sq": [], "tau1": [],
                "tau2": [], "round_s": []}
+    buffer = MetricsBuffer()
+    prefetch = HostPrefetcher()
     t0 = time.time()
     rounds_done = 0
-    freshly_built = True   # first round after a (re)build pays jit compile
-    for r in range(start_round, start_round + args.rounds):
-        def fetch(mem_needed=cfg.has_memory_input):
-            b = lm_batches_for_dfl(corpus, tau1, n, args.batch,
-                                   args.seq, r)
-            if mem_needed:
-                m = cfg.memory_tokens or 16
-                key = jax.random.key(1000 + r)
-                b["memory"] = jax.random.normal(
-                    key, (tau1, n, args.batch, m,
-                          cfg.memory_dim or cfg.d_model), jnp.float32)
-            return b
+    last_ckpt = start_round
+    last_loss = float("nan")
 
-        tr0 = time.time()
-        state, metrics = round_fn(state, fetch())
-        loss = float(metrics["loss"])          # blocks on the round
-        round_s = time.time() - tr0
-        rounds_done += 1
-        history["round"].append(r + 1)
-        history["loss"].append(loss)
-        history["consensus_sq"].append(float(metrics["consensus_sq"]))
-        history["tau1"].append(tau1)
-        history["tau2"].append(tau2)
-        history["round_s"].append(round_s)
-        if (r + 1) % args.log_every == 0:
-            print(f"round {r+1:4d} tau=({tau1},{tau2}) loss={loss:.4f} "
-                  f"consensus={float(metrics['consensus_sq']):.3e} "
-                  f"({(time.time()-t0)/rounds_done:.1f}s/round)",
-                  flush=True)
-        if args.ckpt_dir and args.ckpt_every and (r + 1) % args.ckpt_every == 0:
-            save_checkpoint(args.ckpt_dir, r + 1, state.params,
-                            {"loss": loss})
+    def flush_rows():
+        nonlocal last_loss
+        for row in buffer.flush():
+            r = row["round"]
+            history["round"].append(r + 1)
+            history["loss"].append(row["loss"])
+            history["consensus_sq"].append(row["consensus_sq"])
+            history["tau1"].append(row["tau1"])
+            history["tau2"].append(row["tau2"])
+            history["round_s"].append(row["round_s"])
+            last_loss = row["loss"]
+            if (r + 1) % args.log_every == 0:
+                done = r + 1 - start_round
+                print(f"round {r+1:4d} tau=({row['tau1']},{row['tau2']}) "
+                      f"loss={row['loss']:.4f} "
+                      f"consensus={row['consensus_sq']:.3e} "
+                      f"({(time.time()-t0)/max(done,1):.1f}s/round)",
+                      flush=True)
+            if controller is not None:
+                controller.observe(row["tau1"], row["tau2"], row["round_s"])
+
+    r = start_round
+    k = chunk_len(r, rounds_done)
+    if k > 0:
+        prefetch.schedule(build_batches, r, k, tau1, meta=(r, k, tau1))
+    while r < end:
+        batches, meta = prefetch.take()
+        if meta != (r, k, tau1):   # stale after a re-plan changed tau1
+            batches = build_batches(r, k, tau1)
+        t_dispatch = time.time()   # sync backends EXECUTE inside dispatch
+        state, metrics = executor.dispatch(state, batches, tau1, tau2)
+        buffer.push(r, k, tau1, tau2, metrics, dispatched_at=t_dispatch)
+        r += k
+        rounds_done += k
+        # overlap: build the NEXT superstep's batches while the device runs
+        # this one (a later re-plan invalidates at most this one chunk).
+        k_next = chunk_len(r, rounds_done)
+        if k_next > 0:
+            prefetch.schedule(build_batches, r, k_next, tau1,
+                              meta=(r, k_next, tau1))
+        # host sync boundary: re-plans need per-round timings each chunk;
+        # otherwise only log/checkpoint boundaries (or the end) block.
+        boundary = (controller is not None
+                    or any((rr + 1) % args.log_every == 0
+                           for rr in range(r - k, r))
+                    or (args.ckpt_every
+                        and r // args.ckpt_every > last_ckpt // args.ckpt_every)
+                    or r >= end)
+        if boundary:
+            flush_rows()
+        if (args.ckpt_every and args.ckpt_dir
+                and r // args.ckpt_every > last_ckpt // args.ckpt_every):
+            # superstep granularity: the checkpoint lands at the first
+            # superstep edge at/after the --ckpt-every multiple.
+            save_checkpoint(args.ckpt_dir, r, state.params,
+                            {"loss": last_loss})
+            last_ckpt = r
         if controller is not None:
-            # compile-contaminated rounds spend budget but don't enter the
-            # least-squares cost fit.
-            controller.observe(tau1, tau2, round_s, fit=not freshly_built)
-            freshly_built = False
             new = controller.maybe_replan(rounds_done)
             if controller.exhausted:
                 print(f"budget exhausted after {rounds_done} rounds "
@@ -218,17 +349,30 @@ def main(argv=None) -> None:
                 break
             if new is not None:
                 tau1, tau2 = new.tau1, new.tau2
-                dcfg, round_fn, engine = build(tau1, tau2)
-                freshly_built = True
-                print(f"replanned tau=({tau1},{tau2}) at round {r+1} "
+                print(f"replanned tau=({tau1},{tau2}) at round {r} "
                       f"(t_step={new.round_cost.t_compute_step:.3f}s, "
                       f"t_gossip={new.round_cost.t_gossip_step:.3f}s, "
-                      f"predicted bound {new.predicted_bound:.4f})")
+                      f"predicted bound {new.predicted_bound:.4f}, "
+                      f"recompiles so far: {executor.compile_count})")
+                if args.dispatch == "static" and r < end:
+                    # the static cache compiles per (tau1, tau2): pay the
+                    # new key on dummy data now — for the chunk sizes
+                    # still ahead only — not inside a measured round.
+                    warm_executables(remaining_chunk_lens(r, rounds_done),
+                                     tau1, tau2)
+        k = chunk_len(r, rounds_done)
+    if prefetch.pending_meta is not None:
+        prefetch.cancel()
+    flush_rows()
     if args.ckpt_dir:
         save_checkpoint(args.ckpt_dir, start_round + rounds_done,
                         state.params, {})
     if controller is not None:
         history["plan_events"] = controller.history
+    # compile_count must equal compile_count_warmup under fused dispatch:
+    # every re-plan reused the warmed executables.
+    history["compile_count_warmup"] = compiles_after_warmup
+    history["compile_count"] = executor.compile_count
     if args.history_out:
         with open(args.history_out, "w") as f:
             json.dump(history, f, indent=1)

@@ -134,23 +134,39 @@ class AdaptiveController:
     # -- measurement -------------------------------------------------------
 
     def observe(self, tau1: int, tau2: int, seconds: float, *,
-                fit: bool = True) -> None:
+                fit: Optional[bool] = None) -> None:
         """Record one completed round's measured wall-clock.
 
-        ``fit=False`` spends the budget but keeps the round out of the
-        cost fit — for rounds whose wall-clock is contaminated by one-off
-        work (jit trace/compile after a schedule change).
+        EVERY measured round enters the least-squares cost fit: since the
+        recompile-free executor (``repro.core.executor``) a schedule change
+        is two device scalars, so no round's wall-clock is ever
+        contaminated by a jit re-trace/compile and the old ``fit=False``
+        escape hatch (used to drop freshly-(re)built rounds) is obsolete.
+        The parameter is kept as a deprecation shim and IGNORED.
         """
+        if fit is not None:
+            import warnings
+
+            warnings.warn(
+                "AdaptiveController.observe(fit=...) is deprecated and "
+                "ignored: dynamic-tau dispatch never compile-contaminates "
+                "a round, so every measured round enters the cost fit",
+                DeprecationWarning, stacklevel=2)
         comp = self.current.compressor if self.current is not None else None
         ratio = self.cost_model.compression_ratio(comp)
-        if fit:
-            self.observations.append(
-                _Observation(tau1, tau2, float(seconds), ratio))
+        self.observations.append(
+            _Observation(tau1, tau2, float(seconds), ratio))
         self.spent_s += float(seconds)
         # wire/energy accounting is analytic (exact), not measured:
         self.spent_bits += (
             tau2 * self.cost_model.gossip_bits_per_step(comp))
         self.spent_j += self.cost_model.round_cost(tau1, tau2, comp).energy_j
+
+    def spend_overhead(self, seconds: float) -> None:
+        """Charge one-off wall-clock (executor warmup compiles, stalls) to
+        the budget WITHOUT entering the per-round cost fit — overhead is
+        real budget spend but is not a (tau1, tau2) round sample."""
+        self.spent_s += float(seconds)
 
     def fitted_cost_model(self) -> CostModel:
         """The prior cost model with compute/link speeds re-fitted.

@@ -24,6 +24,18 @@ def test_reduced_round_lowers_and_runs(mesh):
     assert lowered is not None
 
 
+def test_reduced_superstep_lowers(mesh):
+    """The fused K-round dynamic-tau superstep is a lowerable production
+    artifact: donated state carry, replicated int32 tau scalars, stacked
+    [K] metrics."""
+    arch = REGISTRY["qwen3-1.7b"]
+    built = S.build_train_superstep(arch, "train_4k", mesh, rounds=2,
+                                    tau1_max=3, tau2_max=2, reduced=True)
+    assert built.meta["kind"] == "superstep"
+    assert built.meta["rounds"] == 2 and built.meta["tau1_max"] == 3
+    assert built.lower() is not None
+
+
 def test_reduced_decode_lowers(mesh):
     arch = REGISTRY["falcon-mamba-7b"]
     built = S.build_decode(arch, "decode_32k", mesh, reduced=True)

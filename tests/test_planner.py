@@ -279,6 +279,24 @@ def test_adaptive_refits_and_replans_to_true_costs():
                for h in ctrl.history)
 
 
+def test_observe_fits_every_round_and_deprecates_fit_kwarg():
+    """With the recompile-free executor no round is compile-contaminated:
+    observe() enters EVERY measured round into the cost fit, and the old
+    ``fit=`` escape hatch is a deprecation shim that is ignored."""
+    ctrl = _controller(ratio_prior=1.0, budget_s=1e6)
+    ctrl.initial_plan()
+    t1, t2 = ctrl.current.tau1, ctrl.current.tau2
+    ctrl.observe(t1, t2, 1.0)
+    assert len(ctrl.observations) == 1
+    with pytest.warns(DeprecationWarning, match="fit"):
+        ctrl.observe(t1, t2, 1.0, fit=False)   # ignored: still fitted
+    with pytest.warns(DeprecationWarning, match="fit"):
+        ctrl.observe(t1, t2, 1.0, fit=True)
+    assert len(ctrl.observations) == 3
+    # budget is spent for every observed round regardless.
+    assert ctrl.spent_s == pytest.approx(3.0)
+
+
 def test_adaptive_rank_deficient_fallback_scales_prior():
     """With all observations at one schedule the 2-unknown fit is rank-1:
     the controller scales the prior uniformly instead of diverging."""

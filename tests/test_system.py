@@ -48,6 +48,24 @@ def test_cdfl_system_runs():
     assert out["bits_per_round"] < base["bits_per_round"]
 
 
+def test_checkpoint_roundtrip_ml_dtypes(tmp_path):
+    """bf16 leaves survive the .npz round trip (numpy reloads ml_dtypes
+    arrays as raw void bytes; restore must reinterpret via the template) —
+    this is what --ckpt-dir resume of the bf16 archs depends on."""
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+
+    tree = {"w": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+            "b": jnp.linspace(0, 1, 4, dtype=jnp.float32)}
+    save_checkpoint(str(tmp_path), 3, tree, {"loss": 1.0})
+    restored, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 3
+    for k in tree:
+        got = jnp.asarray(restored[k])
+        assert got.dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                      np.asarray(tree[k], np.float32))
+
+
 def test_lm_pipeline_roundtrip():
     from repro.data.lm import SyntheticLM, lm_batches_for_dfl
 
