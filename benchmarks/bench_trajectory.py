@@ -1,0 +1,259 @@
+"""Per-round (tau1, tau2) trajectories vs. every fixed schedule, at equal
+budget, under straggler/fading episodes — the schedule-as-data payoff.
+
+The deployment is the 8-node ring quadratic testbed with a TIME-VARYING
+cost process (``planner.cost.CostProcess``): link episodes priced via
+``WirelessLinks.per_edge`` make gossip ~1000x more expensive during two
+windows (one straggling node gating the synchronous gossip step, one
+network-wide deep fade). Every run is charged on the same simulated
+deployment clock and stopped at the same wall-clock budget:
+
+  * ``fixed``      — each (tau1, tau2) grid point run unchanged through
+                     the episodes (a fixed schedule keeps paying the
+                     episode tariff: that is the cost of schedule-as-
+                     control-flow).
+  * ``trajectory`` — ``planner.optimize.plan_trajectory`` walks the same
+                     clock and re-plans EVERY ROUND from the remaining
+                     budget and the tariff in force: gossip rounds while
+                     links are good, compute-only (tau2 = 0) rounds
+                     through the outages, gossip again after.
+
+All runs execute for real on ``RoundExecutor`` — the fixed grid as uniform
+dispatches, the trajectory as heterogeneous [K, 2] ``dispatch_trajectory``
+supersteps — through ONE executor, so the whole sweep (every schedule,
+every seed) shares one compiled executable per superstep shape:
+``recompiles_after_warmup == 0`` is asserted on every run. The headline
+(asserted under ``--check``, the CI config): the trajectory's measured
+loss at budget beats EVERY fixed grid point's.
+
+The measured loss is the mean per-node global loss gap
+mean_i F(x_i) - F* = 0.5 mean_i ||x_i - tbar||^2 (what each node actually
+deploys — it charges both average-model error and residual consensus
+drift, so under- and over-gossiping both lose). One shared learning rate
+for every run keeps the comparison purely about the schedule.
+
+Writes ``BENCH_trajectory.json`` at the repo root. ``--smoke`` drops to
+2 seeds (the CI config).
+
+    PYTHONPATH=src python -m benchmarks.bench_trajectory --smoke --check
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from collections import Counter
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DFLConfig, RoundExecutor, init_state, ring, \
+    stack_round_batches
+from repro.optim import sgd
+from repro.planner import (Budget, ComputeModel, CostModel, CostProcess,
+                           Episode, LinkModel, WirelessLinks, faded_links,
+                           plan_trajectory, straggler_links)
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_trajectory.json")
+
+N = 8
+DIM = 16
+SIGMA = 0.5            # sampling-noise sigma (gradient = w - t_i - noise)
+TSCALE = 0.8           # non-IID target spread
+ETA = 0.008            # one shared lr: the comparison is about schedules
+GRID = [(1, 2), (2, 2), (2, 1), (4, 1), (8, 1), (16, 1),
+        (1, 0), (4, 0), (16, 0)]   # tau2=0: the outage escape hatches
+T_GOSSIP = 1.0         # base gossip step cost (compute step = 1 unit)
+SLOWDOWN = 1000.0      # episode link degradation (outage-severity)
+EPISODES = ((100.0, 220.0, "straggler"), (300.0, 420.0, "fade"))
+BUDGET = 500.0
+SUPERSTEP = 10
+MAX_ROUNDS = 3000
+
+
+def build_process() -> CostProcess:
+    """The straggler/fading scenario priced via WirelessLinks.per_edge."""
+    topo = ring(N)
+    model_bits = 32.0 * DIM
+    copy_bytes = model_bits / 8.0
+    base_link = WirelessLinks(
+        default=LinkModel(bytes_per_s=copy_bytes / T_GOSSIP))
+    episodes = []
+    for (t0, t1, kind) in EPISODES:
+        if kind == "straggler":
+            link = straggler_links(base_link, topo, 0, SLOWDOWN)
+        else:
+            link = faded_links(base_link, SLOWDOWN)
+        episodes.append(Episode(t0, t1, link=link, label=kind))
+    base = CostModel(compute=ComputeModel(step_flops=1.0, flops_per_s=1.0),
+                     link=base_link, topology=topo, model_bits=model_bits)
+    return CostProcess(base=base, episodes=tuple(episodes))
+
+
+def testbed_constants(targets: np.ndarray) -> Tuple[float, float]:
+    """(f_gap, effective sigma) — Assumption 1.5 sigma includes the
+    non-IID heterogeneity (see benchmarks/theory_check)."""
+    tbar = targets.mean(0)
+    f_gap = 0.5 * float(np.sum(tbar ** 2))
+    sig_eff = float(np.sqrt(
+        SIGMA ** 2 + np.max(np.sum((targets - tbar) ** 2, axis=1))))
+    return f_gap, sig_eff
+
+
+def fixed_schedule(process: CostProcess, budget: float, t1: int,
+                   t2: int) -> Tuple[List[Tuple[int, int]], float]:
+    """The rounds a fixed (t1, t2) affords: walk the deployment clock,
+    each round priced at the tariff in force when it starts."""
+    clock = 0.0
+    taus: List[Tuple[int, int]] = []
+    while len(taus) < MAX_ROUNDS:
+        rc = process.at(clock).round_cost(t1, t2)
+        if clock + rc.time_s > budget:
+            break
+        clock += rc.time_s
+        taus.append((t1, t2))
+    return taus, clock
+
+
+def run_schedule(executor: RoundExecutor, taus: List[Tuple[int, int]],
+                 targets: np.ndarray, seed: int, tau1_max: int,
+                 opt) -> float:
+    """Execute the schedule on the executor (heterogeneous [K, 2] chunks)
+    and return the final mean per-node global loss gap."""
+    rng = np.random.default_rng(seed)
+    state = init_state({"w": jnp.zeros((DIM,))}, N, opt, jax.random.key(seed))
+    r = 0
+    while r < len(taus):
+        k = min(SUPERSTEP, len(taus) - r)
+        chunk = np.asarray(taus[r:r + k], np.int32)
+        # batches row t of round k: target + noise (the stochastic
+        # gradient's noise lives in the data; rows >= tau1 never read).
+        noise = rng.normal(size=(k, tau1_max, N, DIM)) * (SIGMA / np.sqrt(DIM))
+        batches = jnp.asarray(targets[None, None] + noise, jnp.float32)
+        state, _ = executor.dispatch_trajectory(state, batches, chunk)
+        r += k
+    x = np.asarray(state.params["w"])
+    tbar = targets.mean(0)
+    return 0.5 * float(np.mean(np.sum((x - tbar) ** 2, axis=1)))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", type=int, default=6)
+    ap.add_argument("--smoke", action="store_true",
+                    help="2 seeds (the CI config)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the trajectory beats every fixed grid "
+                         "point's measured loss at budget")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    seeds = 2 if args.smoke else args.seeds
+
+    topo = ring(N)
+    process = build_process()
+    targets = np.random.default_rng(0).normal(size=(N, DIM)) * TSCALE
+    f_gap, sig_eff = testbed_constants(targets)
+    opt = sgd(ETA)
+
+    def quad_loss(p, b, k=None):
+        return 0.5 * jnp.sum((p["w"] - b) ** 2)
+
+    # every schedule the sweep dispatches fits one executor compiled
+    # against the grid maxima: the WHOLE bench is one executable per
+    # superstep shape.
+    tau1_max = max(t1 for t1, _ in GRID)
+    tau2_max = max(t2 for _, t2 in GRID)
+    executor = RoundExecutor(
+        DFLConfig(tau1=tau1_max, tau2=tau2_max, topology=topo),
+        quad_loss, opt)
+
+    # -- plan ---------------------------------------------------------------
+    tp = plan_trajectory(Budget(wall_clock_s=BUDGET), process,
+                         rounds=MAX_ROUNDS, sigma=sig_eff, f_gap=f_gap,
+                         grid=GRID, eta=ETA)
+    traj = [tuple(map(int, row)) for row in tp.taus]
+    fixed = {(t1, t2): fixed_schedule(process, BUDGET, t1, t2)
+             for (t1, t2) in GRID}
+
+    # -- warm every superstep shape, then measure ---------------------------
+    lengths = {len(traj)} | {len(taus) for taus, _ in fixed.values()}
+    shapes = {min(SUPERSTEP, n) for n in lengths if n} | \
+             {n % SUPERSTEP for n in lengths if n % SUPERSTEP}
+    dummy_state = init_state({"w": jnp.zeros((DIM,))}, N, opt,
+                             jax.random.key(0))
+    for k in sorted(shapes, reverse=True):
+        executor.warmup(dummy_state, jnp.zeros((k, tau1_max, N, DIM)))
+    warm_compiles = executor.compile_count
+
+    results: Dict[str, dict] = {}
+    for (t1, t2), (taus, clock) in fixed.items():
+        losses = [run_schedule(executor, taus, targets, s, tau1_max, opt)
+                  for s in range(seeds)]
+        results[f"{t1},{t2}"] = {
+            "tau1": t1, "tau2": t2, "rounds": len(taus),
+            "priced_time": clock, "loss": float(np.mean(losses)),
+            "loss_per_seed": [float(v) for v in losses],
+        }
+        print(f"fixed ({t1:2d},{t2}): rounds={len(taus):4d} "
+              f"time={clock:6.1f} loss={np.mean(losses):.4f}")
+
+    traj_losses = [run_schedule(executor, traj, targets, s, tau1_max, opt)
+                   for s in range(seeds)]
+    traj_loss = float(np.mean(traj_losses))
+    counts = Counter(traj)
+    print(f"trajectory: rounds={len(traj)} time={tp.total_time_s:6.1f} "
+          f"loss={traj_loss:.4f} schedule={dict(counts)}")
+
+    best_key = min(results, key=lambda k: results[k]["loss"])
+    best_loss = results[best_key]["loss"]
+    recompiles = executor.compile_count - warm_compiles
+    print(f"best fixed: ({best_key}) loss={best_loss:.4f} -> trajectory "
+          f"{'WINS %.2fx' % (best_loss / traj_loss) if traj_loss < best_loss else 'LOSES'}"
+          f" | recompiles after warmup: {recompiles}")
+
+    # THE zero-recompile property: the whole sweep — every fixed schedule,
+    # every seed, and the heterogeneous trajectory — reused the warmed
+    # executables (hard failure otherwise).
+    assert recompiles == 0, (
+        f"{recompiles} recompiles after warmup across the sweep")
+
+    payload = {
+        "config": {
+            "nodes": N, "dim": DIM, "sigma": SIGMA, "target_scale": TSCALE,
+            "eta": ETA, "grid": [list(g) for g in GRID],
+            "t_gossip": T_GOSSIP, "slowdown": SLOWDOWN,
+            "episodes": [list(e) for e in EPISODES], "budget": BUDGET,
+            "superstep": SUPERSTEP, "seeds": seeds, "smoke": args.smoke,
+            "backend": jax.default_backend(),
+        },
+        "fixed": results,
+        "trajectory": {
+            "rounds": len(traj), "priced_time": tp.total_time_s,
+            "loss": traj_loss,
+            "loss_per_seed": [float(v) for v in traj_losses],
+            "schedule_counts": {f"{a},{b}": c for (a, b), c in
+                                counts.items()},
+            "schedule": [list(t) for t in traj],
+        },
+        "best_fixed": {"key": best_key, "loss": best_loss},
+        "trajectory_beats_best_fixed": traj_loss < best_loss,
+        "margin_x": best_loss / traj_loss if traj_loss > 0 else float("inf"),
+        "recompiles_after_warmup": recompiles,
+        "compile_count_warmup": warm_compiles,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {args.out}")
+    if args.check:
+        assert traj_loss < best_loss, (
+            f"trajectory loss {traj_loss:.4f} does not beat best fixed "
+            f"({best_key}) {best_loss:.4f}")
+        print("check OK: trajectory beats every fixed grid point at "
+              "budget, zero recompiles across the sweep")
+
+
+if __name__ == "__main__":
+    main()

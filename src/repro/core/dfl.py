@@ -377,13 +377,15 @@ def make_round_fn(
 
     round_fn(state, batches) -> (state', metrics); batches leaves
     [tau1, N, local_batch...]. ``constrain``: optional params-tree sharding
-    re-assertion (see _local_updates). DENSE ENGINE ONLY: the sparse
-    engine's node axes are shard_map-manual so the node-dim constraint is
-    structural there, but its non-node (auto) axes currently run
-    unconstrained — before enabling sparse on >1-sized auto axes (see
-    substrate.supports_partial_auto) the sharded path must grow an
-    auto-axis constrain, or the scan-carry all-gather blowup documented in
-    _local_updates returns.
+    re-assertion (see _local_updates). The sparse engine's node axes are
+    shard_map-manual so the node-dim constraint is structural there, but
+    its non-node (auto) axes run unconstrained: passing a ``constrain``
+    to the sparse engine on a mesh with a >1-sized auto axis RAISES
+    (``make_sharded_round_fn``) instead of silently dropping it — the
+    scan-carry all-gather blowup documented in _local_updates would
+    otherwise return the moment partial-auto meshes are enabled. On
+    node-only meshes (every auto axis size 1) there is nothing to
+    re-assert and the sparse engine accepts-and-ignores it.
 
     engine: "dense" (default; any topology), "sparse" (shard_map +
     ppermute; needs ``mesh`` whose ``node_axes`` enumerate all N nodes and
@@ -411,7 +413,8 @@ def make_round_fn(
         return make_sharded_round_fn(cfg, loss_fn, opt, mesh,
                                      node_axes=node_axes,
                                      use_kernels=use_kernels,
-                                     dynamic_taus=dynamic_taus)
+                                     dynamic_taus=dynamic_taus,
+                                     constrain=constrain)
     if engine != "dense":
         raise ValueError(f"unknown engine {engine!r}")
     sub = DenseSubstrate(cfg.topology)

@@ -7,15 +7,27 @@ re-jitted the round function (tau1/tau2 were static scan lengths), so the
 controller had to discard compile-contaminated rounds. The executor makes
 schedule changes and round dispatch near-zero-cost:
 
-* **Dynamic taus** — one compile of ``round_body`` with (tau1, tau2) as
-  device scalars (``make_round_fn(..., dynamic_taus=True)``): bounded loops
-  over the (tau1_max, tau2_max) maxima with dynamic trip counts. Any
-  schedule within the maxima dispatches against the same executable; a
-  re-plan never retraces (asserted via the trace counter below).
+* **Schedule as data** — the schedule is a first-class ``[K, 2]`` int32
+  device array, not control flow: the K-round superstep scans
+  ``(tau1[k], tau2[k])`` as ``lax.scan`` xs alongside the batches, so every
+  round of one dispatch can run a DIFFERENT (tau1, tau2)
+  (``dispatch_trajectory``; the per-round adaptation of Yan & Li
+  arXiv:2308.06496 and the sporadic schedules of DSpodFL arXiv:2402.03448).
+  A uniform schedule is just the constant trajectory — ``dispatch(state,
+  batches, tau1, tau2)`` broadcasts the pair to [K, 2] and shares the SAME
+  compiled executable, so trajectories add zero compiles over PR-3's
+  scalar path. Per round, ``round_body`` runs bounded loops over the
+  (tau1_max, tau2_max) maxima with dynamic trip counts
+  (``make_round_fn(..., dynamic_taus=True)``); any schedule within the
+  maxima dispatches against the same executable and a re-plan never
+  retraces (asserted via the trace counter below).
 * **Fused supersteps** — a jitted ``lax.scan`` over K rounds with the
   ``DFLState`` carry DONATED (params+opt buffers reused in place, halving
   peak state memory vs. the undonated per-round jit) and on-device stacked
   metrics, so the host syncs once per superstep instead of once per round.
+  Metrics come back tagged with the REALIZED schedule (``tau1``/``tau2``
+  [K] rows), so downstream accounting never has to reconstruct which
+  schedule a round actually ran.
 * **Overlap** — ``HostPrefetcher`` builds the next superstep's batches on a
   background thread while the device runs, and ``MetricsBuffer`` defers the
   host-blocking metric fetch to log boundaries.
@@ -90,9 +102,14 @@ class RoundExecutor:
     ``dispatch(state, batches, tau1, tau2)`` runs one superstep: batches
     leaves are [K, tau1_max, ...] (dynamic) / [K, tau1, ...]-compatible
     (static mode slices the padded rows off), K inferred from the leading
-    dim; returns ``(state', metrics)`` with metrics leaves stacked [K].
-    ``compile_count`` counts traces of the superstep — the zero-recompile
-    assertion hook for tests and benchmarks.
+    dim; returns ``(state', metrics)`` with metrics leaves stacked [K]
+    (including the realized ``tau1``/``tau2`` per round).
+    ``dispatch_trajectory(state, batches, taus)`` is the general form:
+    ``taus`` is a [K, 2] int32 array and round k runs
+    (taus[k, 0], taus[k, 1]) — scanned as xs through the SAME executable
+    the uniform dispatch uses, so heterogeneous schedules cost zero extra
+    compiles. ``compile_count`` counts traces of the superstep — the
+    zero-recompile assertion hook for tests and benchmarks.
     """
 
     def __init__(
@@ -125,13 +142,17 @@ class RoundExecutor:
             round_fn = make_round_fn(cfg, loss_fn, opt, dynamic_taus=True,
                                      **self._make_kw)
 
-            def superstep(state: DFLState, batches: PyTree, tau1, tau2):
+            def superstep(state: DFLState, batches: PyTree, taus):
                 self._trace_count += 1  # fires per trace == per compile
 
-                def body(st, b):
-                    return round_fn(st, b, tau1, tau2)
+                def body(st, xs):
+                    b, tau = xs
+                    st, metrics = round_fn(st, b, tau[0], tau[1])
+                    # tag metrics with the REALIZED schedule so per-round
+                    # accounting survives heterogeneous trajectories.
+                    return st, dict(metrics, tau1=tau[0], tau2=tau[1])
 
-                return jax.lax.scan(body, state, batches)
+                return jax.lax.scan(body, state, (batches, taus))
 
             self._dynamic_fn = jax.jit(
                 superstep, donate_argnums=(0,) if donate else ())
@@ -167,6 +188,28 @@ class RoundExecutor:
                 "rebuild the executor with a larger tau2_max")
         return tau1, tau2
 
+    def _check_trajectory(self, taus, k: int) -> np.ndarray:
+        arr = np.asarray(taus, dtype=np.int32)
+        if arr.ndim != 2 or arr.shape[1] != 2:
+            raise ValueError(
+                f"trajectory must be [K, 2] (tau1, tau2) rows, got shape "
+                f"{arr.shape}")
+        if arr.shape[0] != k:
+            raise ValueError(
+                f"trajectory has {arr.shape[0]} rows but batches carry "
+                f"K={k} rounds")
+        for t1 in (int(arr[:, 0].min()), int(arr[:, 0].max())):
+            if not 1 <= t1 <= self.tau1_max:
+                raise ValueError(
+                    f"tau1={t1} outside compiled bounds [1, {self.tau1_max}]"
+                    "; rebuild the executor with a larger tau1_max")
+        for t2 in (int(arr[:, 1].min()), int(arr[:, 1].max())):
+            if not 0 <= t2 <= self.tau2_max:
+                raise ValueError(
+                    f"tau2={t2} outside compiled bounds [0, {self.tau2_max}]"
+                    "; rebuild the executor with a larger tau2_max")
+        return arr
+
     def _static_fn(self, tau1: int, tau2: int) -> Callable:
         key = (tau1, tau2)
         fn = self._static_cache.get(key)
@@ -187,19 +230,55 @@ class RoundExecutor:
             self._static_cache[key] = fn
         return fn
 
-    def dispatch(self, state: DFLState, batches: PyTree, tau1: int,
-                 tau2: int) -> Tuple[DFLState, dict]:
-        """One K-round fused superstep (K = batches' leading dim)."""
-        tau1, tau2 = self._check_taus(tau1, tau2)
+    def dispatch_trajectory(self, state: DFLState, batches: PyTree,
+                            taus) -> Tuple[DFLState, dict]:
+        """One fused superstep executing a heterogeneous schedule: round k
+        runs (taus[k, 0], taus[k, 1]) local/gossip steps. ``taus`` is a
+        [K, 2] int-like array with every row inside the compiled
+        (tau1_max, tau2_max) bounds; batches leaves are [K, tau1_max, ...]
+        (only the first taus[k, 0] rows of round k are read). In dynamic
+        mode the trajectory rides the SAME executable as the uniform
+        ``dispatch`` — schedule heterogeneity never compiles. The static
+        fallback splits the trajectory into contiguous uniform segments and
+        plays them through the keyed compile cache (one compile per
+        distinct (tau1, tau2), as always). Returned metrics are stacked [K]
+        and tagged with the realized per-round ``tau1``/``tau2``."""
         k = jax.tree_util.tree_leaves(batches)[0].shape[0]
+        arr = self._check_trajectory(taus, k)
         self.dispatch_count += 1
         self.rounds_dispatched += k
         if self.dynamic:
-            return self._dynamic_fn(state, batches, jnp.int32(tau1),
-                                    jnp.int32(tau2))
-        # static fallback: drop the padding rows the dynamic layout carries.
-        sliced = jax.tree_util.tree_map(lambda b: b[:, :tau1], batches)
-        return self._static_fn(tau1, tau2)(state, sliced)
+            return self._dynamic_fn(state, batches, jnp.asarray(arr))
+        # static fallback: contiguous uniform segments, padding rows
+        # (which the dynamic layout carries) sliced off per segment.
+        parts: List[dict] = []
+        i = 0
+        while i < k:
+            j = i + 1
+            while j < k and (arr[j] == arr[i]).all():
+                j += 1
+            t1, t2 = int(arr[i, 0]), int(arr[i, 1])
+            seg = jax.tree_util.tree_map(lambda b: b[i:j, :t1], batches)
+            state, m = self._static_fn(t1, t2)(state, seg)
+            parts.append(dict(
+                m,
+                tau1=jnp.full((j - i,), t1, jnp.int32),
+                tau2=jnp.full((j - i,), t2, jnp.int32)))
+            i = j
+        metrics = {key: (parts[0][key] if len(parts) == 1
+                         else jnp.concatenate([p[key] for p in parts]))
+                   for key in parts[0]}
+        return state, metrics
+
+    def dispatch(self, state: DFLState, batches: PyTree, tau1: int,
+                 tau2: int) -> Tuple[DFLState, dict]:
+        """One K-round fused superstep (K = batches' leading dim) at a
+        uniform (tau1, tau2): the constant-trajectory special case."""
+        tau1, tau2 = self._check_taus(tau1, tau2)
+        k = jax.tree_util.tree_leaves(batches)[0].shape[0]
+        return self.dispatch_trajectory(
+            state, batches, np.tile(np.array([[tau1, tau2]], np.int32),
+                                    (k, 1)))
 
     def dispatch_round(self, state: DFLState, batches: PyTree, tau1: int,
                        tau2: int) -> Tuple[DFLState, dict]:
@@ -304,8 +383,14 @@ class MetricsBuffer:
         self._pending: List[Tuple[int, int, int, int, dict]] = []
         self._window_start: Optional[float] = None
 
-    def push(self, round0: int, k: int, tau1: int, tau2: int,
-             metrics: dict, dispatched_at: Optional[float] = None) -> None:
+    def push(self, round0: int, k: int, tau1: Optional[int],
+             tau2: Optional[int], metrics: dict,
+             dispatched_at: Optional[float] = None) -> None:
+        """``tau1``/``tau2`` may be None when the metrics carry the
+        realized per-round ``tau1``/``tau2`` rows (executor dispatches tag
+        them); metric-carried values win over the scalars either way, so
+        heterogeneous-trajectory supersteps report the schedule each round
+        actually ran."""
         if self._window_start is None:
             self._window_start = (dispatched_at if dispatched_at is not None
                                   else time.time())
@@ -326,10 +411,15 @@ class MetricsBuffer:
         rows: List[dict] = []
         for round0, k, tau1, tau2, metrics in self._pending:
             host = {key: np.asarray(v) for key, v in metrics.items()}
+            tau1s = host.pop("tau1", None)
+            tau2s = host.pop("tau2", None)
             for i in range(k):
                 row = {key: float(v[i]) for key, v in host.items()}
-                row.update(round=round0 + i, tau1=tau1, tau2=tau2,
-                           round_s=per_round_s)
+                row.update(
+                    round=round0 + i,
+                    tau1=int(tau1s[i]) if tau1s is not None else tau1,
+                    tau2=int(tau2s[i]) if tau2s is not None else tau2,
+                    round_s=per_round_s)
                 rows.append(row)
         self._pending = []
         self._window_start = None

@@ -49,6 +49,7 @@ def make_sharded_round_fn(
     node_axes: Sequence[str] = ("data",),
     use_kernels: bool = False,
     dynamic_taus: bool = False,
+    constrain=None,
 ) -> Callable[..., Tuple[DFLState, dict]]:
     """Sparse-gossip round; call under jax.jit. State leaves carry the
     stacked node dim sharded over ``node_axes`` (local size 1).
@@ -56,14 +57,37 @@ def make_sharded_round_fn(
     ``dynamic_taus``: round_fn(state, batches, tau1, tau2) with replicated
     int32 step-count scalars riding through the shard_map boundary;
     cfg.tau1/cfg.tau2 are the compiled maxima (see core.dfl.make_round_fn).
-    The trip counts are identical on every node shard, so the per-shift
-    ppermutes inside the dynamic while-loops stay collectively matched.
+    The trip counts are identical on every node shard — whether broadcast
+    from two device scalars or sliced per round from a [K, 2] trajectory
+    scanned as xs (``core.executor.dispatch_trajectory``) — so the
+    per-shift ppermutes inside the dynamic loops stay collectively matched.
+
+    ``constrain``: the dense engine's stacked-param sharding re-assertion.
+    The sparse engine cannot honor it on its auto (GSPMD) axes — the specs
+    name the manual node axes, and shard_map strips those — so a mesh with
+    a >1-sized auto axis RAISES here rather than silently dropping the
+    constraint (the silent drop was only ever safe because such meshes
+    fall back to dense on the pinned jaxlib; see ROADMAP). Size-1 auto
+    axes carry nothing to re-assert, so the argument is accepted and
+    ignored there.
     """
     from jax.sharding import PartitionSpec as P
 
     import numpy as np
 
     topo = cfg.topology
+    if constrain is not None:
+        unconstrained = [a for a in mesh.axis_names
+                        if a not in node_axes and mesh.shape[a] > 1]
+        if unconstrained:
+            raise NotImplementedError(
+                "the sparse engine drops the `constrain` sharding "
+                f"re-assertion on its auto (GSPMD) mesh axes "
+                f"{unconstrained}: GSPMD may then resolve scan carries / "
+                "vmapped grads to replicated and all-gather entire stacked "
+                "weight trees (core.dfl._local_updates). Use the dense "
+                "engine on tensor-parallel meshes, or teach "
+                "ShardedSubstrate an auto-axis constrain first.")
     assert topo.is_shift_structured(), (
         f"{topo.name} is not circulant; use the dense engine "
         "(core.dfl.make_round_fn) for arbitrary topologies")

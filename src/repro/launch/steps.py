@@ -197,9 +197,65 @@ def select_engine(engine: str, dcfg, mesh: Mesh, mode: str) -> str:
     node_axes = shard_lib.node_axes_for(mode, mesh)
     if not node_axes:
         return "dense"
+    # Train rounds built here always re-assert stacked-param shardings
+    # (``_make_constrain``); the sparse engine refuses a constrain on
+    # meshes with >1-sized auto (GSPMD) axes rather than silently dropping
+    # it (core.sharded), so auto-selection must not steer those meshes
+    # into the raise — dense stays the tensor-parallel path until the
+    # sharded engine grows an auto-axis constrain.
+    if any(mesh.shape[a] > 1 for a in mesh.axis_names
+           if a not in node_axes):
+        return "dense"
     return ("sparse"
             if dfl_lib.sparse_engine_eligible(dcfg, mesh, node_axes)
             else "dense")
+
+
+def roofline_cost_inputs(
+    arch: ArchConfig,
+    shape_name: str,
+    mesh: Mesh,
+    *,
+    topology: str = "ring",
+    reduced: bool = False,
+) -> Dict[str, float]:
+    """MEASURED planner cost inputs from compiled XLA artifacts.
+
+    Lowers+compiles the unit steps (``build_local_step`` /
+    ``build_gossip_step``) and reads the roofline terms off the optimized
+    HLO (``launch.roofline``): ``step_flops`` is one local step's FLOPs
+    PER NODE — the roofline's per-device number rescaled by
+    mesh.size / N, since the per-device program carries all N vmapped
+    node updates split over mesh.size devices (on gossip-dp meshes,
+    nodes == devices and the factor is the model-parallel share; on a
+    1-device host mesh it divides the stacked work back out) — matching
+    ``ComputeModel.step_flops``'s one-node contract.
+    ``gossip_collective_bytes`` is one gossip step's per-device
+    collective bytes. These replace the planner's a-priori 6*P*tokens /
+    fp32-tree estimates — the same numbers, measured instead of assumed
+    (``plan_train_schedule(..., use_roofline=True)``).
+
+    ``gossip_collective_bytes`` is 0.0 when the lowering emits no
+    collectives (single-device host meshes mix in registers); callers must
+    fall back to the analytic wire size then.
+    """
+    from repro.launch import roofline as roof_lib
+
+    n = shard_lib.num_nodes_for(arch.sharding_mode, mesh, arch.fsdp_nodes)
+    local = build_local_step(arch, shape_name, mesh, reduced=reduced)
+    la = roof_lib.analyze_compiled(local.lower().compile(),
+                                   chips=mesh.size)
+    gossip = build_gossip_step(arch, mesh, topology=topology,
+                               reduced=reduced)
+    ga = roof_lib.analyze_compiled(gossip.lower().compile(),
+                                   chips=mesh.size)
+    return {
+        "step_flops": float(la["roofline"]["flops"]) * mesh.size / max(n, 1),
+        "step_hbm_bytes": float(la["roofline"]["hbm_bytes"]),
+        "gossip_collective_bytes": float(
+            ga["roofline"]["collective_bytes"]),
+        "nodes": n,
+    }
 
 
 def plan_train_schedule(
@@ -217,15 +273,25 @@ def plan_train_schedule(
     reduced: bool = False,
     grid=None,
     wire_engine: str = "auto",
+    use_roofline: bool = False,
 ):
     """Pick (tau1, tau2) for a (arch, shape, mesh) deployment with the
     planner (``repro.planner``) before building anything.
 
-    The compute side is priced analytically — 6 * params * tokens FLOPs
-    per local step per node at the chip's bf16 peak — and the gossip side
-    from the model's fp32 wire size over one ICI link; both are the same
-    first-order estimates the roofline uses. Returns the planner ``Plan``;
-    ``build_planned_round`` turns it straight into a Built round.
+    By default the compute side is priced analytically — 6 * params *
+    tokens FLOPs per local step per node at the chip's bf16 peak — and the
+    gossip side from the model's fp32 wire size over one ICI link; the
+    same first-order estimates the roofline uses. With
+    ``use_roofline=True`` both sides come MEASURED off the compiled HLO
+    instead (``roofline_cost_inputs``): the local step's actual per-NODE
+    FLOPs, and the gossip step's actual collective bytes folded back into
+    an effective per-copy wire size (so wire-bit budgets price what the
+    lowering really ships; falls back to the analytic size when the
+    lowering has no collectives — e.g. single-device host meshes — or
+    when a ``compression`` is set, since the compressor's model_dim is
+    derived from model_bits). Returns
+    the planner ``Plan``; ``build_planned_round`` turns it straight into a
+    Built round.
     """
     from repro.launch import mesh as mesh_lib
     from repro.planner import (Budget, ComputeModel, CostModel, LinkModel,
@@ -238,14 +304,32 @@ def plan_train_schedule(
                                mixing_impl="dense", topology=topology)
     params = cfg.param_count()
     tokens_per_node = shape.global_batch * shape.seq_len / max(n, 1)
+    step_flops = 6.0 * params * tokens_per_node
+    model_bits = 32.0 * params
+    if use_roofline:
+        measured = roofline_cost_inputs(arch, shape_name, mesh,
+                                        topology=topology, reduced=reduced)
+        step_flops = measured["step_flops"]
+        copies = mixing_lib.gossip_copies_per_step(dcfg.topology,
+                                                   wire_engine)
+        if (measured["gossip_collective_bytes"] > 0.0 and copies > 0
+                and compression is None):
+            # effective per-copy wire size: what the compiled gossip step
+            # actually moves, spread over the engine's copy count, so
+            # round_cost's copies * model_bits reproduces the measurement.
+            # Compressed planning keeps the analytic size: the planner
+            # derives the compressor's model_dim from model_bits/32, so
+            # overriding it with wire bytes would corrupt delta/zeta.
+            model_bits = (8.0 * measured["gossip_collective_bytes"]
+                          / copies)
     cost_model = CostModel(
         compute=ComputeModel(
-            step_flops=6.0 * params * tokens_per_node,
+            step_flops=step_flops,
             flops_per_s=flops_per_s or mesh_lib.PEAK_FLOPS_BF16),
         link=LinkModel(
             bytes_per_s=link_bytes_per_s or mesh_lib.ICI_BW),
         topology=dcfg.topology,
-        model_bits=32.0 * params,
+        model_bits=model_bits,
         engine=wire_engine)
     kw = dict(sigma=sigma, f_gap=f_gap)
     if grid is not None:
@@ -281,6 +365,7 @@ def build_planned_round(
         "round_time_s": p.round_cost.time_s,
         "round_wire_bits": p.round_cost.wire_bits,
         "budget_s": budget_s,
+        "use_roofline": bool(plan_kw.get("use_roofline", False)),
     }
     return built
 
@@ -347,15 +432,20 @@ def build_train_superstep(
 ) -> Built:
     """The fused K-round superstep as a lowerable production artifact.
 
-    One executable covers EVERY (tau1, tau2) <= (tau1_max, tau2_max): the
-    step counts are replicated int32 device scalars
-    (``make_round_fn(dynamic_taus=True)``), the K rounds run as a
-    ``lax.scan`` whose ``DFLState`` carry is DONATED (params+opt buffers
-    aliased in place — the peak-memory fix the per-round jit was missing),
-    and the per-round metrics come back stacked [K] so the host syncs once
-    per superstep. Batch leaves are [K, tau1_max, N, B, ...] with rows >=
-    tau1 never read. This is the compile-proof artifact of what
-    ``repro.core.executor.RoundExecutor`` dispatches at runtime.
+    One executable covers EVERY length-K schedule trajectory within
+    (tau1_max, tau2_max): the schedule is a replicated [K, 2] int32 device
+    array scanned as ``lax.scan`` xs alongside the batches, so round k
+    runs (taus[k, 0], taus[k, 1]) dynamic trip counts
+    (``make_round_fn(dynamic_taus=True)``) and a heterogeneous per-round
+    schedule costs zero extra compiles over a uniform one. The ``DFLState``
+    carry is DONATED (params+opt buffers aliased in place — the
+    peak-memory fix the per-round jit was missing) and the per-round
+    metrics come back stacked [K], tagged with the realized tau1/tau2
+    rows, so the host syncs once per superstep. Batch leaves are
+    [K, tau1_max, N, B, ...] with rows >= taus[k, 0] never read. This is
+    the compile-proof artifact of what
+    ``repro.core.executor.RoundExecutor.dispatch_trajectory`` dispatches
+    at runtime.
     """
     cfg = arch.reduced if reduced else arch.model
     shape = SHAPES[shape_name]
@@ -373,11 +463,13 @@ def build_train_superstep(
         node_axes=shard_lib.node_axes_for(mode, mesh),
         use_kernels=use_kernels, dynamic_taus=True)
 
-    def superstep(state, batches, tau1, tau2):
-        def body(st, b):
-            return round_fn(st, b, tau1, tau2)
+    def superstep(state, batches, taus):
+        def body(st, xs):
+            b, tau = xs
+            st, metrics = round_fn(st, b, tau[0], tau[1])
+            return st, dict(metrics, tau1=tau[0], tau2=tau[1])
 
-        return jax.lax.scan(body, state, batches)
+        return jax.lax.scan(body, state, (batches, taus))
 
     batch_abs, batch_sh = _abstract_batch(arch, cfg, shape, mesh, mode, n,
                                           tau1_max)
@@ -386,18 +478,18 @@ def build_train_superstep(
                  for k, v in batch_abs.items()}
     batch_sh = {k: NamedSharding(mesh, P(None, *sh.spec))
                 for k, sh in batch_sh.items()}
-    tau_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    taus_abs = jax.ShapeDtypeStruct((rounds, 2), jnp.int32)
     fn = jax.jit(
         superstep,
-        in_shardings=(state_sh, batch_sh, shard_lib.replicated(mesh),
-                      shard_lib.replicated(mesh)),
+        in_shardings=(state_sh, batch_sh, shard_lib.replicated(mesh)),
         out_shardings=(state_sh, None),
         donate_argnums=(0,),
     )
-    return Built(fn, (state_abs, batch_abs, tau_abs, tau_abs), {
+    return Built(fn, (state_abs, batch_abs, taus_abs), {
         "kind": "superstep", "arch": arch.arch_id, "shape": shape_name,
         "mode": mode, "nodes": n, "rounds": rounds,
         "tau1_max": tau1_max, "tau2_max": tau2_max, "engine": engine,
+        "schedule": "trajectory",
         "compressed": dcfg.is_compressed,
     }, ctx=_act_policy(mesh, mode, "train"))
 

@@ -26,11 +26,20 @@ device runs.
 Adaptive planning (--plan-budget SECONDS): hands (tau1, tau2) control to
 ``repro.planner.adaptive``. The controller plans the first schedule from a
 neutral cost prior, measures real round wall-clock, re-fits per-step
-compute/gossip times, and re-plans every --replan-every rounds until the
-budget is spent; the schedule trajectory lands in the history JSON
-(--history-out). With the fused executor a re-plan is just two new device
-scalars, so no round is ever compile-contaminated and every measured round
-enters the controller's cost fit.
+compute/gossip times, and re-plans until the budget is spent; the schedule
+trajectory lands in the history JSON (--history-out, ``schedule`` field =
+the realized per-round [tau1, tau2] rows). With the fused executor a
+re-plan is schedule DATA, so no round is ever compile-contaminated and
+every measured round enters the controller's cost fit.
+
+Schedule control (--schedule): "adaptive" (default with --plan-budget)
+re-plans at superstep boundaries every --replan-every rounds;
+"trajectory" re-plans INSIDE the superstep — each dispatch executes a
+per-round [K, 2] (tau1, tau2) trajectory from
+``AdaptiveController.next_trajectory`` via
+``executor.dispatch_trajectory`` (probe rounds for identifiability ride
+the last round of a chunk), still with zero recompiles. "fixed" pins the
+CLI taus.
 """
 from __future__ import annotations
 
@@ -111,6 +120,13 @@ def main(argv=None) -> None:
                          "(tau1, tau2) planner (repro.planner.adaptive)")
     ap.add_argument("--replan-every", type=int, default=5,
                     help="rounds between re-plans when --plan-budget is set")
+    ap.add_argument("--schedule", default="auto",
+                    choices=["auto", "fixed", "adaptive", "trajectory"],
+                    help="schedule control: fixed CLI taus, adaptive "
+                         "boundary re-plans, or per-round [K, 2] "
+                         "trajectories dispatched inside each superstep "
+                         "(needs --plan-budget and --dispatch fused); "
+                         "auto = adaptive iff --plan-budget is set")
     ap.add_argument("--history-out", default="",
                     help="write the round/plan history JSON here")
     args = ap.parse_args(argv)
@@ -142,13 +158,25 @@ def main(argv=None) -> None:
     if args.engine != "dense" and len(jax.devices()) == n:
         mesh = jax.make_mesh((n,), ("nodes",))
 
+    schedule_mode = args.schedule
+    if schedule_mode == "auto":
+        schedule_mode = "adaptive" if args.plan_budget > 0 else "fixed"
+    if schedule_mode in ("adaptive", "trajectory") and args.plan_budget <= 0:
+        raise SystemExit(f"--schedule {schedule_mode} needs --plan-budget")
+    if schedule_mode == "trajectory" and args.dispatch != "fused":
+        raise SystemExit("--schedule trajectory dispatches per-round "
+                         "[K, 2] schedules through the dynamic executor; "
+                         "the static keyed cache can't (use --dispatch "
+                         "fused)")
+
     # Adaptive planner: --plan-budget hands (tau1, tau2) control to
     # repro.planner.adaptive, which re-fits per-step compute/gossip times
     # from measured round wall-clock and re-plans every --replan-every
-    # rounds. The CLI taus seed the neutral prior's first schedule.
+    # rounds (or emits per-round trajectories under --schedule
+    # trajectory). The CLI taus seed the neutral prior's first schedule.
     controller = None
     tau1, tau2 = args.tau1, args.tau2
-    if args.plan_budget > 0:
+    if schedule_mode in ("adaptive", "trajectory"):
         model_bits = tree_wire_bits(Identity(), params0)
         # neutral prior: t_compute_step = t_gossip_step = 1 s, with the
         # real topology and model wire size (same accounting as planner).
@@ -197,6 +225,7 @@ def main(argv=None) -> None:
     print(f"arch={cfg.name} nodes={n} tau=({tau1},{tau2}) "
           f"zeta={topology.zeta:.3f} comp={args.compression or 'none'} "
           f"engine={engine} dispatch={args.dispatch} "
+          f"schedule={schedule_mode} "
           f"superstep={args.superstep} wire={bits/8e6:.1f} MB/round/node")
 
     def round_batch(r: int, t1: int):
@@ -226,9 +255,10 @@ def main(argv=None) -> None:
 
     def chunk_len(r: int, rounds_done: int) -> int:
         k = min(max(args.superstep, 1), end - r)
-        if controller is not None:
+        if schedule_mode == "adaptive":
             # cut at re-plan boundaries so rounds_done % replan_every == 0
-            # lands exactly at a superstep edge.
+            # lands exactly at a superstep edge (trajectory mode re-plans
+            # inside every superstep instead, so no cut there).
             to_replan = args.replan_every - rounds_done % args.replan_every
             k = min(k, to_replan)
         return k
@@ -251,6 +281,8 @@ def main(argv=None) -> None:
             done += kk
         return sorted(ks, reverse=True)
 
+    warmed_shapes = set()   # superstep lengths K already compiled
+
     def warm_executables(ks, t1: int, t2: int) -> None:
         """Pre-pay compiles on dummy data so no MEASURED round contains
         one. Fused compiles per SHAPE only (the schedule args are
@@ -265,6 +297,7 @@ def main(argv=None) -> None:
                 executor.warmup(state, dummy_batches(kk))
             else:
                 executor.warmup(state, dummy_batches(kk), t1, t2)
+            warmed_shapes.add(kk)
         if executor.compile_count > before:
             print(f"warmed {executor.compile_count - before} superstep "
                   f"executable(s) in {time.time()-tw0:.1f}s")
@@ -285,8 +318,15 @@ def main(argv=None) -> None:
     last_loss = float("nan")
 
     def flush_rows():
+        """Materialize buffered metrics into history/logs and feed the
+        controller. Adaptive mode observes per round (uniform chunks, so
+        the amortized round_s is exact); trajectory mode observes per
+        CHUNK (heterogeneous schedules share one fused dispatch — only
+        the chunk total is measurable, and ``observe_chunk``'s aggregated
+        fit row keeps the least-squares fit exact)."""
         nonlocal last_loss
-        for row in buffer.flush():
+        rows = buffer.flush()
+        for row in rows:
             r = row["round"]
             history["round"].append(r + 1)
             history["loss"].append(row["loss"])
@@ -302,11 +342,64 @@ def main(argv=None) -> None:
                       f"consensus={row['consensus_sq']:.3e} "
                       f"({(time.time()-t0)/max(done,1):.1f}s/round)",
                       flush=True)
-            if controller is not None:
+            if controller is not None and schedule_mode != "trajectory":
                 controller.observe(row["tau1"], row["tau2"], row["round_s"])
+        if rows and controller is not None and schedule_mode == "trajectory":
+            controller.observe_chunk(
+                [(row["tau1"], row["tau2"]) for row in rows],
+                sum(row["round_s"] for row in rows))
 
-    r = start_round
-    k = chunk_len(r, rounds_done)
+    if schedule_mode == "trajectory":
+        # Per-round schedule control: every superstep dispatches a [k, 2]
+        # trajectory planned by the controller — the re-plan happens
+        # INSIDE the superstep (probe rounds included), not at its
+        # boundary, and the realized per-round schedule comes back in the
+        # metrics rows.
+        r = start_round
+        while r < end:
+            k = chunk_len(r, rounds_done)
+            taus = controller.next_trajectory(k, round_idx=rounds_done)
+            if taus is None:
+                print(f"budget exhausted after {rounds_done} rounds "
+                      f"({controller.spent_s:.1f}s)")
+                break
+            if len(taus) not in warmed_shapes:
+                # a superstep length the pre-loop warmup never saw (a
+                # budget-paced short chunk, or the shifted chunk grid
+                # after one): a new batch SHAPE — warm it on dummy data
+                # so the measured rounds stay compile-free.
+                tw0 = time.time()
+                executor.warmup(state, dummy_batches(len(taus)))
+                warmed_shapes.add(len(taus))
+                controller.spend_overhead(time.time() - tw0)
+            # host batch build is real wall-clock the budget pays for
+            # (trajectory mode has no prefetch overlap: the chunk's
+            # schedule is only known now) — charge it as overhead, not as
+            # round time.
+            tb0 = time.time()
+            batches = stack_round_batches(
+                [round_batch(r + i, int(t1))
+                 for i, (t1, _t2) in enumerate(taus)], tau1_max)
+            controller.spend_overhead(time.time() - tb0)
+            t_dispatch = time.time()
+            state, metrics = executor.dispatch_trajectory(
+                state, batches, taus)
+            buffer.push(r, len(taus), None, None, metrics,
+                        dispatched_at=t_dispatch)
+            r += len(taus)
+            rounds_done += len(taus)
+            flush_rows()   # every realized round enters the cost fit
+            if (args.ckpt_every and args.ckpt_dir
+                    and r // args.ckpt_every
+                    > last_ckpt // args.ckpt_every):
+                save_checkpoint(args.ckpt_dir, r, state.params,
+                                {"loss": last_loss})
+                last_ckpt = r
+
+    # fixed/adaptive modes: the prefetched uniform-schedule superstep loop
+    # (trajectory mode already ran above; r = end skips it).
+    r = end if schedule_mode == "trajectory" else start_round
+    k = chunk_len(r, rounds_done) if r < end else 0
     if k > 0:
         prefetch.schedule(build_batches, r, k, tau1, meta=(r, k, tau1))
     while r < end:
@@ -369,6 +462,12 @@ def main(argv=None) -> None:
                         state.params, {})
     if controller is not None:
         history["plan_events"] = controller.history
+    # the realized per-round schedule as [tau1, tau2] rows — what each
+    # round ACTUALLY ran (= the dispatched trajectory under --schedule
+    # trajectory, probe rounds included).
+    history["schedule"] = [[t1, t2] for t1, t2 in
+                           zip(history["tau1"], history["tau2"])]
+    history["schedule_mode"] = schedule_mode
     # compile_count must equal compile_count_warmup under fused dispatch:
     # every re-plan reused the warmed executables.
     history["compile_count_warmup"] = compiles_after_warmup

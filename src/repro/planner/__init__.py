@@ -28,10 +28,15 @@ is a module here:
 from repro.planner.cost import (
     ComputeModel,
     CostModel,
+    CostProcess,
+    Episode,
     LinkModel,
     RoundCost,
     WirelessLinks,
     comm_compute_cost,
+    edge_outage,
+    faded_links,
+    straggler_links,
     unit_cost_model,
     wireless_link,
 )
@@ -49,20 +54,24 @@ from repro.planner.optimize import (
     DEFAULT_GRID,
     Budget,
     Plan,
+    TrajectoryPlan,
     evaluate_grid,
     plan,
+    plan_trajectory,
     rounds_within,
     select_plan,
 )
 from repro.planner.adaptive import AdaptiveController
 
 __all__ = [
-    "ComputeModel", "CostModel", "LinkModel", "RoundCost", "WirelessLinks",
-    "comm_compute_cost", "unit_cost_model", "wireless_link",
+    "ComputeModel", "CostModel", "CostProcess", "Episode", "LinkModel",
+    "RoundCost", "WirelessLinks",
+    "comm_compute_cost", "edge_outage", "faded_links", "straggler_links",
+    "unit_cost_model", "wireless_link",
     "BoundEval", "bound_20", "cdfl_contraction", "choco_gamma_star",
     "effective_zeta", "lr_condition_19", "max_eta_19",
     "predicted_loss_decrement",
-    "DEFAULT_GRID", "Budget", "Plan", "evaluate_grid", "plan",
-    "rounds_within", "select_plan",
+    "DEFAULT_GRID", "Budget", "Plan", "TrajectoryPlan", "evaluate_grid",
+    "plan", "plan_trajectory", "rounds_within", "select_plan",
     "AdaptiveController",
 ]

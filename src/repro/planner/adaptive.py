@@ -9,12 +9,21 @@ by least squares over the observed (tau1, tau2, seconds) history and
 re-plans the remainder of the budget with ``planner.optimize.plan``.
 
 Identifiability: with observations at a single (tau1, tau2) the 2-unknown
-fit is rank-1; the controller then scales the prior cost model uniformly to
-match the measured round time (preserving the prior compute/comm split)
-and full identification kicks in as soon as a re-plan changes the schedule.
+fit is rank-1. Rather than re-planning off an unidentifiable fit, the
+controller then INJECTS A PROBE ROUND — the grid schedule closest in
+predicted round time to the current one whose (tau1, tau2) row is linearly
+independent of everything observed — so one round of measurement buys full
+identification; until a probe lands, ``fitted_cost_model`` scales the
+prior uniformly to match the measured round time (preserving the prior
+compute/comm split).
 
-Wired into ``repro.launch.train`` via ``--plan-budget`` /
-``--replan-every``; every re-plan is appended to ``controller.history`` so
+Two control surfaces, both recompile-free under the fused executor:
+``maybe_replan`` (superstep-boundary re-plan, ``train.py --plan-budget``)
+and ``next_trajectory`` (a per-round [k, 2] schedule emitted for the NEXT
+superstep — re-planning INSIDE the superstep via
+``RoundExecutor.dispatch_trajectory``, optionally against a known
+time-varying ``CostProcess``; ``train.py --schedule trajectory``). Every
+(re)plan/probe/trajectory event is appended to ``controller.history`` so
 the emitted metrics show the schedule trajectory.
 """
 from __future__ import annotations
@@ -25,9 +34,11 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.compression import Compressor
-from repro.planner.cost import (ComputeModel, CostModel, LinkModel,
-                               WirelessLinks)
-from repro.planner.optimize import Budget, Plan, plan as plan_fn
+from repro.planner.cost import (ComputeModel, CostModel, CostProcess,
+                               LinkModel, WirelessLinks)
+from repro.planner.optimize import (Budget, DEFAULT_GRID, Plan,
+                                    plan as plan_fn,
+                                    plan_trajectory as plan_trajectory_fn)
 
 __all__ = ["AdaptiveController"]
 
@@ -53,6 +64,11 @@ class AdaptiveController:
       sigma, f_gap, L, gamma, grid, compressors: forwarded to
         ``planner.optimize.plan``.
       replan_every: rounds between re-plans (K).
+      process: optional KNOWN time-varying deviation (straggler/fading/
+        outage episodes on the deployment clock). ``next_trajectory``
+        re-bases it on the measured-fit cost model each superstep, so the
+        emitted per-round schedule routes around announced episodes while
+        the base speeds stay measurement-driven.
     """
 
     def __init__(
@@ -67,10 +83,12 @@ class AdaptiveController:
         compressors: Sequence[Optional[Compressor]] = (None,),
         gamma: float = 1.0,
         L: float = 1.0,
+        process: Optional[CostProcess] = None,
     ):
         assert replan_every >= 1
         self.budget = budget
         self.cost_model = cost_model
+        self.process = process
         self.sigma = sigma
         self.f_gap = f_gap
         self.replan_every = replan_every
@@ -107,7 +125,7 @@ class AdaptiveController:
             return None
         return Budget(wall_clock_s=wall, wire_bits=bits, energy_j=joules)
 
-    def _emit(self, round_idx: int, cause: str) -> None:
+    def _emit(self, round_idx: int, cause: str, **extra) -> None:
         p = self.current
         assert p is not None
         self.history.append({
@@ -122,6 +140,7 @@ class AdaptiveController:
             "t_compute_step": p.round_cost.t_compute_step,
             "t_gossip_step": p.round_cost.t_gossip_step,
             "spent_s": self.spent_s,
+            **extra,
         })
 
     def initial_plan(self) -> Plan:
@@ -162,11 +181,54 @@ class AdaptiveController:
             tau2 * self.cost_model.gossip_bits_per_step(comp))
         self.spent_j += self.cost_model.round_cost(tau1, tau2, comp).energy_j
 
+    def observe_chunk(self, taus, seconds: float) -> None:
+        """Record one dispatched SUPERSTEP's measured wall-clock as a
+        single aggregated observation: the fit row is
+        (sum tau1_k, sum tau2_k) over the chunk's [k, 2] schedule.
+
+        This is how heterogeneous-trajectory supersteps must be observed:
+        the host can only time the fused dispatch as a whole, and
+        amortizing elapsed/K uniformly over rounds of DIFFERENT schedules
+        (``MetricsBuffer``'s per-round rows) would corrupt a per-round
+        least-squares fit — e.g. a probe round inherits the chunk mean and
+        the 'identified' fit is garbage. The per-step model is linear, so
+        the chunk total  seconds ~= (sum tau1) t_step + (sum tau2) ratio
+        t_gossip  is an exact aggregation, and a chunk carrying a probe
+        still raises the fit rank (its tau1:tau2 ratio differs from the
+        uniform chunks').
+        """
+        arr = np.asarray(taus, dtype=np.int64).reshape(-1, 2)
+        assert len(arr) >= 1
+        comp = self.current.compressor if self.current is not None else None
+        ratio = self.cost_model.compression_ratio(comp)
+        t1_sum, t2_sum = int(arr[:, 0].sum()), int(arr[:, 1].sum())
+        self.observations.append(
+            _Observation(t1_sum, t2_sum, float(seconds), ratio))
+        self.spent_s += float(seconds)
+        self.spent_bits += (
+            t2_sum * self.cost_model.gossip_bits_per_step(comp))
+        # per-round energy is linear in (tau1, tau2): pricing the sums
+        # equals summing the rounds.
+        self.spent_j += self.cost_model.round_cost(
+            t1_sum, t2_sum, comp).energy_j
+
     def spend_overhead(self, seconds: float) -> None:
         """Charge one-off wall-clock (executor warmup compiles, stalls) to
         the budget WITHOUT entering the per-round cost fit — overhead is
         real budget spend but is not a (tau1, tau2) round sample."""
         self.spent_s += float(seconds)
+
+    def _obs_rows(self) -> np.ndarray:
+        """The least-squares design matrix rows of every observation."""
+        return np.array([[o.tau1, o.tau2 * o.compression_ratio]
+                         for o in self.observations], dtype=np.float64)
+
+    def fit_rank(self) -> int:
+        """Rank of the step/gossip-time fit (0 no data, 1 unidentifiable —
+        all history proportional to one (tau1, tau2) direction, 2 full)."""
+        if not self.observations:
+            return 0
+        return int(np.linalg.matrix_rank(self._obs_rows()))
 
     def fitted_cost_model(self) -> CostModel:
         """The prior cost model with compute/link speeds re-fitted.
@@ -179,8 +241,7 @@ class AdaptiveController:
         """
         if not self.observations:
             return self.cost_model
-        a = np.array([[o.tau1, o.tau2 * o.compression_ratio]
-                      for o in self.observations], dtype=np.float64)
+        a = self._obs_rows()
         b = np.array([o.seconds for o in self.observations], dtype=np.float64)
         prior_t_step = self.cost_model.compute.t_step
         prior_t_gossip = self.cost_model.t_gossip_step(None)
@@ -215,14 +276,60 @@ class AdaptiveController:
             link=LinkModel(bytes_per_s=bytes_per_step / t_gossip,
                            joules_per_byte=jpb))
 
-    # -- the control loop hook --------------------------------------------
+    # -- identifiability probes -------------------------------------------
+
+    def _probe_candidate(self) -> Optional[Tuple[int, int]]:
+        """A grid (tau1, tau2) whose observation row is linearly
+        independent of everything measured so far (i.e. it RAISES the fit
+        rank), closest in predicted round time to the current schedule so
+        the probe disturbs the budget as little as possible. None when the
+        grid has no rank-raising point."""
+        if self.current is None or not self.observations:
+            return None
+        grid = tuple(self.grid) if self.grid is not None else DEFAULT_GRID
+        rows = self._obs_rows()
+        rank = np.linalg.matrix_rank(rows)
+        cm = self.fitted_cost_model()
+        comp = self.current.compressor
+        ratio = self.cost_model.compression_ratio(comp)
+        cur_t = cm.round_cost(self.current.tau1, self.current.tau2,
+                              comp).time_s
+        best = None
+        for (t1, t2) in grid:
+            row = np.array([[t1, t2 * ratio]], dtype=np.float64)
+            if np.linalg.matrix_rank(np.vstack([rows, row])) <= rank:
+                continue
+            dt = abs(cm.round_cost(t1, t2, comp).time_s - cur_t)
+            if best is None or dt < best[0]:
+                best = (dt, (t1, t2))
+        return best[1] if best is not None else None
+
+    def _probe_plan(self, remaining: Budget) -> Optional[Plan]:
+        """The probe candidate priced as a full Plan under the
+        (scaled-prior) fitted model, so callers get eta/rounds/bound for
+        the probe schedule too."""
+        cand = self._probe_candidate()
+        if cand is None:
+            return None
+        kw = self._plan_kwargs()
+        kw["grid"] = [cand]
+        try:
+            return plan_fn(remaining, self.fitted_cost_model(), **kw)
+        except ValueError:
+            return None
+
+    # -- the control loop hooks -------------------------------------------
 
     def maybe_replan(self, round_idx: int) -> Optional[Plan]:
         """Call once per completed round (after ``observe``).
 
         Returns a NEW Plan when the schedule changed at this boundary,
         else None. Sets ``exhausted`` when the remaining budget affords no
-        further rounds.
+        further rounds. With a rank-deficient timing fit (all history at
+        one schedule direction) the boundary emits a PROBE plan — a
+        rank-raising grid schedule — instead of re-planning off the
+        unidentifiable scaled fit; the probe's own measurements make the
+        next boundary fully identified.
         """
         if self.exhausted or self.current is None:
             return None
@@ -232,6 +339,12 @@ class AdaptiveController:
             return None
         if round_idx % self.replan_every != 0:
             return None
+        if self.observations and self.fit_rank() < 2:
+            probe = self._probe_plan(remaining)
+            if probe is not None:
+                self.current = probe
+                self._emit(round_idx, "probe")
+                return probe
         self.cost_model = self.fitted_cost_model()
         try:
             new = plan_fn(remaining, self.cost_model, **self._plan_kwargs())
@@ -244,3 +357,74 @@ class AdaptiveController:
         self.current = new
         self._emit(round_idx, "replan")
         return new if changed else None
+
+    def next_trajectory(self, k: int,
+                        round_idx: int = 0) -> Optional[np.ndarray]:
+        """The next k rounds' [k, 2] (tau1, tau2) schedule — the
+        per-round control surface for ``RoundExecutor.dispatch_trajectory``
+        (``train.py --schedule trajectory``).
+
+        Re-fits the cost model from every observation, then plans a
+        per-round trajectory over the remaining budget: against the known
+        ``process`` episodes (re-based on the fitted speeds) when one was
+        given, else the fitted model held constant (a uniform chunk). A
+        rank-deficient fit rides a probe round on the LAST round of the
+        chunk — re-planning INSIDE the superstep, not just at its
+        boundary — so identifiability costs one round and zero recompiles.
+        Returns None (and sets ``exhausted``) when the budget affords no
+        further round; the returned trajectory may be SHORTER than k when
+        the budget runs out mid-chunk.
+        """
+        assert k >= 1
+        if self.exhausted or self.current is None:
+            return None
+        remaining = self._remaining_budget()
+        if remaining is None:
+            self.exhausted = True
+            return None
+        probe = (self._probe_candidate()
+                 if self.observations and self.fit_rank() < 2 else None)
+        self.cost_model = self.fitted_cost_model()
+        process = (CostProcess(base=self.cost_model)
+                   if self.process is None
+                   else dataclasses.replace(self.process,
+                                            base=self.cost_model))
+        try:
+            tp = plan_trajectory_fn(remaining, process, rounds=k,
+                                    t0=self.spent_s, **self._plan_kwargs())
+        except ValueError:
+            self.exhausted = True
+            return None
+        if tp.rounds == 0:
+            self.exhausted = True
+            return None
+        self.current = tp.steps[0]
+        taus = tp.taus
+        if probe is not None:
+            # the probe replaces the chunk's LAST planned round — only if
+            # the swapped chunk still fits the remaining budget (the
+            # probe is chosen nearest in round time, but a tight budget
+            # end could not absorb an expensive rank-raiser).
+            comp = self.current.compressor
+            rc_probe = self.cost_model.round_cost(int(probe[0]),
+                                                  int(probe[1]), comp)
+            rc_last = tp.steps[-1].round_cost
+            fits = (
+                (remaining.wall_clock_s is None
+                 or tp.total_time_s - rc_last.time_s + rc_probe.time_s
+                 <= remaining.wall_clock_s)
+                and (remaining.wire_bits is None
+                     or tp.total_wire_bits - rc_last.wire_bits
+                     + rc_probe.wire_bits <= remaining.wire_bits)
+                and (remaining.energy_j is None
+                     or tp.total_energy_j - rc_last.energy_j
+                     + rc_probe.energy_j <= remaining.energy_j))
+            if fits:
+                taus[-1] = probe
+            else:
+                probe = None
+        self._emit(round_idx, "trajectory",
+                   schedule=[[int(a), int(b)] for a, b in taus],
+                   probe=([int(probe[0]), int(probe[1])]
+                          if probe is not None else None))
+        return taus

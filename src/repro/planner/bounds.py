@@ -40,9 +40,15 @@ def _condition_19(eta: float, tau1: int, tau2: int, z: float,
                   L: float) -> bool:
     """Condition (19) with the mixing parameter passed as a scalar."""
     tau = tau1 + tau2
-    if z >= 1.0:
-        # zeta = 1 (disconnected components) never reaches consensus:
-        # Assumption 1.6 requires zeta < 1, so no eta > 0 qualifies.
+    if z >= 1.0 or (tau2 == 0 and z > 0.0):
+        # zeta = 1 (disconnected components) never reaches consensus, and
+        # tau2 = 0 with imperfect mixing never mixes AT ALL — as a
+        # standing schedule both violate Assumption 1.6's premise, so no
+        # eta > 0 qualifies. (Per-ROUND tau2 = 0 inside a trajectory is
+        # fine; it is the never-gossip *policy* the bound rejects. NB the
+        # scalar-z form can't distinguish a single node from a multi-node
+        # graph whose zeta rounds to exactly 0.0 — the topology-aware
+        # wrappers below guard on num_nodes > 1.)
         return eta <= 0.0
     if z == 0.0:
         lhs = eta * L + eta**2 * L**2 * tau * (tau - 1)
@@ -61,6 +67,11 @@ def lr_condition_19(eta: float, tau1: int, tau2: int, topo: Topology,
     ``zeta`` overrides the topology's spectral value (used by the planner
     to price compression-degraded mixing, see ``effective_zeta``).
     """
+    if tau2 == 0 and topo.num_nodes > 1:
+        # never-gossip policy on a multi-node graph: no communication
+        # steps at all, whatever the spectrum says (a complete graph's
+        # zeta may compute to exactly 0.0 but tau2 = 0 never applies C).
+        return eta <= 0.0
     z = topo.zeta if zeta is None else zeta
     return _condition_19(eta, tau1, tau2, z, L)
 
@@ -68,6 +79,8 @@ def lr_condition_19(eta: float, tau1: int, tau2: int, topo: Topology,
 def max_eta_19(tau1: int, tau2: int, topo: Topology, L: float = 1.0, *,
                zeta: Optional[float] = None) -> float:
     """Largest eta satisfying condition (19), by bisection."""
+    if tau2 == 0 and topo.num_nodes > 1:
+        return 0.0   # see lr_condition_19: never-gossip admits no eta
     z = topo.zeta if zeta is None else zeta
     lo, hi = 0.0, 1.0 / L
     for _ in range(60):
@@ -88,8 +101,10 @@ def bound_20(eta: float, tau1: int, tau2: int, topo: Topology, T: int,
         drift = 2 eta^2 L^2 sigma^2 (tau1 / (1 - zeta^(2 tau2)) - 1).
     """
     z = topo.zeta if zeta is None else zeta
-    if z >= 1.0:
-        return float("inf")   # Assumption 1.6 violated: no finite bound
+    if z >= 1.0 or (tau2 == 0 and n > 1):
+        # Assumption 1.6 violated, or no communication steps at all on a
+        # multi-node graph: no finite bound.
+        return float("inf")
     drift = 2 * eta**2 * L**2 * sigma**2 * (tau1 / (1 - z ** (2 * tau2)) - 1
                                             if z > 0 else tau1 - 1)
     return 2 * f_gap / (eta * T) + eta * L * sigma**2 / n + drift
@@ -151,8 +166,14 @@ def predicted_loss_decrement(
         z = effective_zeta(topology, delta=compressor.delta(model_dim),
                            gamma=gamma)
     t_descent = T * tau1 / (tau1 + tau2)
-    if T <= 0 or t_descent <= 0 or z >= 1.0:
-        return BoundEval(bound=float("inf"), eta=0.0,
+    if T <= 0 or t_descent <= 0 or z >= 1.0 or (tau2 == 0 and n > 1):
+        # tau2 = 0 on a non-complete graph: a standing never-gossip
+        # schedule has unbounded drift. It stays a valid LAST-RESORT grid
+        # point for per-round trajectory planning (an outage round that
+        # only computes): with every bound infinite, ``select_plan``'s
+        # deterministic tie-break (round time, then taus) chooses among
+        # the compute-only candidates.
+        return BoundEval(bound=float("inf"), eta=float(eta or 0.0),
                          opt_term=float("inf"), stat_term=0.0,
                          drift_term=0.0, zeta=z)
     drift_coeff = 2 * L**2 * sigma**2 * (

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Mapping, Optional, Tuple, Union
+from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -39,6 +39,11 @@ __all__ = [
     "wireless_link",
     "RoundCost",
     "CostModel",
+    "Episode",
+    "CostProcess",
+    "straggler_links",
+    "faded_links",
+    "edge_outage",
     "unit_cost_model",
     "comm_compute_cost",
 ]
@@ -232,6 +237,143 @@ class CostModel:
             t_gossip_step=t_g,
             _comm_time=comm_time,
         )
+
+
+# ---------------------------------------------------------------------------
+# Time-varying deployments: straggler episodes, fading links, outages
+# ---------------------------------------------------------------------------
+
+
+def _as_wireless(link: Union[LinkModel, WirelessLinks]) -> WirelessLinks:
+    return link if isinstance(link, WirelessLinks) else WirelessLinks(
+        default=link)
+
+
+def _scale_link(link: LinkModel, slowdown: float) -> LinkModel:
+    return dataclasses.replace(link, bytes_per_s=link.bytes_per_s / slowdown)
+
+
+def straggler_links(
+    link: Union[LinkModel, WirelessLinks],
+    topology: Topology,
+    node: int,
+    slowdown: float,
+) -> WirelessLinks:
+    """Every edge touching ``node`` runs ``slowdown``x slower.
+
+    Synchronous gossip waits for the slowest transfer
+    (``WirelessLinks.gossip_time`` is a max over active links), so one
+    straggling node gates every gossip step of the whole network — the
+    canonical heterogeneous-node episode the per-round trajectory planner
+    exists to route around.
+    """
+    wl = _as_wireless(link)
+    # undirected edge set (neighbors lists both directions — dedupe first
+    # so each edge is slowed exactly once).
+    touched = {(min(i, j), max(i, j))
+               for i, nbrs in enumerate(topology.neighbors)
+               for j, _w in nbrs if node in (i, j)}
+    per = dict(wl.per_edge)
+    for key in sorted(touched):
+        per[key] = _scale_link(per.get(key, wl.default), slowdown)
+    return dataclasses.replace(wl, per_edge=per)
+
+
+def faded_links(
+    link: Union[LinkModel, WirelessLinks], slowdown: float
+) -> WirelessLinks:
+    """Uniform fading: every link's rate (default and per-edge overrides)
+    divides by ``slowdown`` — a network-wide deep-fade / congestion
+    episode."""
+    wl = _as_wireless(link)
+    per = {k: _scale_link(v, slowdown) for k, v in wl.per_edge.items()}
+    return dataclasses.replace(wl, default=_scale_link(wl.default, slowdown),
+                               per_edge=per)
+
+
+def edge_outage(
+    link: Union[LinkModel, WirelessLinks],
+    edges: Sequence[Tuple[int, int]],
+    residual: float = 1e-3,
+) -> WirelessLinks:
+    """Per-edge outage: the named undirected edges drop to ``residual`` of
+    their rate (a hard 0 would make the synchronous gossip step infinite;
+    DFL over a severed edge in practice degrades to retransmission at some
+    residual throughput)."""
+    wl = _as_wireless(link)
+    per = dict(wl.per_edge)
+    for (i, j) in edges:
+        key = (min(i, j), max(i, j))
+        per[key] = _scale_link(per.get(key, wl.default), 1.0 / residual)
+    return dataclasses.replace(wl, per_edge=per)
+
+
+@dataclasses.dataclass(frozen=True)
+class Episode:
+    """A wall-clock window during which the deployment deviates from base.
+
+    t_start/t_stop: the window [t_start, t_stop) on the deployment clock
+      (seconds, same clock ``CostProcess.at`` is queried with).
+    link: optional LinkModel/WirelessLinks replacing the base link table
+      for the window (build with ``straggler_links``/``faded_links``/
+      ``edge_outage`` for the standard scenarios).
+    compute_scale: >1 slows every local step by that factor for the window
+      (synchronous local epochs wait for the slowest node, so a compute
+      straggler scales the whole step time).
+    """
+
+    t_start: float
+    t_stop: float
+    link: Optional[Union[LinkModel, WirelessLinks]] = None
+    compute_scale: float = 1.0
+    label: str = ""
+
+    def __post_init__(self):
+        assert self.t_stop > self.t_start, "empty episode window"
+        assert self.compute_scale > 0.0
+
+    def active(self, t: float) -> bool:
+        return self.t_start <= t < self.t_stop
+
+
+@dataclasses.dataclass(frozen=True)
+class CostProcess:
+    """A time-varying deployment: base costs plus episodic deviations.
+
+    ``at(t)`` is the cost model in force at deployment-clock ``t``;
+    overlapping episodes compose in declaration order (a later episode's
+    link override wins, compute scales multiply). The trajectory planner
+    (``planner.optimize.plan_trajectory``) walks this clock to price each
+    round of a length-K schedule; ``is_static`` processes degenerate to
+    the fixed-schedule ``plan``.
+    """
+
+    base: CostModel
+    episodes: Tuple[Episode, ...] = ()
+
+    @property
+    def is_static(self) -> bool:
+        return not self.episodes
+
+    def at(self, t: float) -> CostModel:
+        cm = self.base
+        for ep in self.episodes:
+            if not ep.active(t):
+                continue
+            if ep.link is not None:
+                cm = dataclasses.replace(cm, link=ep.link)
+            if ep.compute_scale != 1.0:
+                comp = cm.compute
+                cm = dataclasses.replace(
+                    cm, compute=dataclasses.replace(
+                        comp,
+                        flops_per_s=comp.flops_per_s / ep.compute_scale))
+        return cm
+
+    def horizon(self) -> float:
+        """The last episode boundary (0.0 when static) — after this the
+        process is its base forever."""
+        return max((ep.t_stop for ep in self.episodes), default=0.0)
 
 
 def unit_cost_model(topology: Topology, comm_compute_ratio: float, *,

@@ -15,18 +15,22 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.compression import Compressor
 from repro.planner.bounds import BoundEval, predicted_loss_decrement
-from repro.planner.cost import CostModel, RoundCost
+from repro.planner.cost import CostModel, CostProcess, RoundCost
 
 __all__ = [
     "DEFAULT_GRID",
     "Budget",
     "Plan",
+    "TrajectoryPlan",
     "rounds_within",
     "evaluate_grid",
     "select_plan",
     "plan",
+    "plan_trajectory",
 ]
 
 DEFAULT_GRID: Tuple[Tuple[int, int], ...] = tuple(
@@ -157,3 +161,135 @@ def plan(
         raise ValueError(
             f"no (tau1, tau2) grid point affords even one round in {budget}")
     return select_plan(cands)
+
+
+# ---------------------------------------------------------------------------
+# Per-round trajectories under time-varying costs (schedule as data)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrajectoryPlan:
+    """A per-round schedule: ``steps[k]`` is the Plan chosen for round k.
+
+    ``taus`` is the [K, 2] int32 array the fused executor consumes
+    directly (``RoundExecutor.dispatch_trajectory``); the totals are the
+    planner's PRICED spend over the whole trajectory (the simulated clock
+    the episodes were evaluated against).
+    """
+
+    steps: Tuple[Plan, ...]
+    total_time_s: float
+    total_wire_bits: float
+    total_energy_j: float
+
+    @property
+    def rounds(self) -> int:
+        return len(self.steps)
+
+    @property
+    def taus(self) -> np.ndarray:
+        return np.array([[p.tau1, p.tau2] for p in self.steps],
+                        np.int32).reshape(-1, 2)
+
+    @property
+    def compressors(self) -> Tuple[Optional[Compressor], ...]:
+        return tuple(p.compressor for p in self.steps)
+
+    @property
+    def tau_maxima(self) -> Tuple[int, int]:
+        """(tau1_max, tau2_max) the executor must be compiled against."""
+        if not self.steps:
+            return (1, 0)
+        return (max(p.tau1 for p in self.steps),
+                max(p.tau2 for p in self.steps))
+
+
+def _remaining(budget: Budget, t: float, bits: float,
+               joules: float) -> Optional[Budget]:
+    wall = (budget.wall_clock_s - t
+            if budget.wall_clock_s is not None else None)
+    wbits = (budget.wire_bits - bits
+             if budget.wire_bits is not None else None)
+    energy = (budget.energy_j - joules
+              if budget.energy_j is not None else None)
+    if any(rem is not None and rem <= 0.0
+           for rem in (wall, wbits, energy)):
+        return None
+    return Budget(wall_clock_s=wall, wire_bits=wbits, energy_j=energy)
+
+
+def plan_trajectory(
+    budget: Budget,
+    process: CostProcess,
+    *,
+    rounds: int,
+    sigma: float,
+    f_gap: float,
+    grid: Sequence[Tuple[int, int]] = DEFAULT_GRID,
+    compressors: Sequence[Optional[Compressor]] = (None,),
+    gamma: float = 1.0,
+    L: float = 1.0,
+    eta: Optional[float] = None,
+    t0: float = 0.0,
+) -> TrajectoryPlan:
+    """A per-round (tau1, tau2, compressor) trajectory of at most
+    ``rounds`` rounds under a time-varying cost process.
+
+    Receding-horizon rule: at round k, with the simulated deployment clock
+    at t_k, the round's schedule is ``plan(remaining_budget,
+    process.at(t_k))`` — the best fixed schedule if the rest of the run
+    cost what this instant costs. Myopic by construction (a known future
+    episode does not pre-shift the current round), but it is exactly the
+    per-round adaptation of the resource-constrained wireless-DFL setting
+    (Yan & Li arXiv:2308.06496): cheap links buy gossip-heavy rounds,
+    straggler/fading/outage episodes shift the same budget toward local
+    computation, and the clock advance prices each round at the tariff in
+    force when it actually runs.
+
+    A TIME-INVARIANT process degenerates EXACTLY to ``plan``: the fixed
+    plan's schedule repeated min(plan.rounds, rounds) times (pinned by
+    tests/test_planner.py). ``t0`` starts the deployment clock mid-process
+    (the adaptive controller re-plans from its measured elapsed time).
+
+    The trajectory ends early when the remaining budget affords no further
+    round at the then-current tariff; an infeasible FIRST round raises
+    ``ValueError`` like ``plan`` does.
+    """
+    assert rounds >= 1
+    kw = dict(sigma=sigma, f_gap=f_gap, grid=grid, compressors=compressors,
+              gamma=gamma, L=L, eta=eta)
+    if process.is_static:   # t0 is irrelevant without episodes
+        p = plan(budget, process.base, **kw)
+        k = min(p.rounds, rounds)
+        rc = p.round_cost
+        return TrajectoryPlan(
+            steps=(p,) * k,
+            total_time_s=rc.time_s * k,
+            total_wire_bits=rc.wire_bits * k,
+            total_energy_j=rc.energy_j * k)
+    steps: List[Plan] = []
+    clock = float(t0)
+    spent_bits = spent_j = 0.0
+    remaining: Optional[Budget] = budget
+    for _ in range(rounds):
+        cm = process.at(clock)
+        try:
+            p = plan(remaining, cm, **kw)
+        except ValueError:
+            if not steps:
+                raise
+            break
+        steps.append(p)
+        rc = p.round_cost
+        clock += rc.time_s
+        spent_bits += rc.wire_bits
+        spent_j += rc.energy_j
+        remaining = _remaining(budget, clock - t0, spent_bits, spent_j)
+        if remaining is None:
+            break
+    return TrajectoryPlan(
+        steps=tuple(steps),
+        total_time_s=clock - t0,
+        total_wire_bits=spent_bits,
+        total_energy_j=spent_j)

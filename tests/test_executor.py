@@ -168,6 +168,101 @@ def test_superstep_equals_sequential_rounds():
                                    float(m["loss"][i]), rtol=1e-6)
 
 
+def test_trajectory_superstep_equals_sequential_rounds():
+    """A heterogeneous [K, 2] trajectory fused into one superstep equals
+    the same schedule run as K sequential STATIC rounds (each jitted at
+    its own (tau1, tau2)): params bitwise, metrics tagged with the
+    realized schedule, RNG fold_in discipline intact across the mixed
+    rounds. Plain and C-DFL (stochastic QSGD exercises the per-round key
+    folding)."""
+    from repro.core import make_compressor
+
+    schedule = [(2, 1), (3, 0), (1, 2), (3, 2)]
+    for comp_name in (None, "qsgd"):
+        comp = make_compressor(comp_name) if comp_name else None
+        opt = sgd(0.1)
+        per_round = [batches_for(3, seed=20 + i) for i in range(len(schedule))]
+        ref = fresh_state(opt, compressed=comp is not None)
+        for b, (t1, t2) in zip(per_round, schedule):
+            cfg_s = DFLConfig(tau1=t1, tau2=t2, topology=ring(N),
+                              compression=comp, gamma=0.5)
+            ref, _ = jax.jit(make_round_fn(cfg_s, noisy_loss, opt))(
+                ref, b[:t1])
+        ex = RoundExecutor(DFLConfig(tau1=3, tau2=2, topology=ring(N),
+                                     compression=comp, gamma=0.5),
+                           noisy_loss, opt)
+        stacked = stack_round_batches(per_round, tau1_max=3)
+        out, m = ex.dispatch_trajectory(
+            fresh_state(opt, compressed=comp is not None), stacked,
+            np.array(schedule, np.int32))
+        assert_state_bitwise(ref.params, out.params)
+        if comp is not None:
+            assert_state_bitwise(ref.hat_params, out.hat_params)
+        assert int(out.round_idx) == len(schedule)
+        # metrics carry the REALIZED per-round schedule
+        np.testing.assert_array_equal(np.asarray(m["tau1"]),
+                                      [t1 for t1, _ in schedule])
+        np.testing.assert_array_equal(np.asarray(m["tau2"]),
+                                      [t2 for _, t2 in schedule])
+
+
+def test_trajectory_shares_executable_with_uniform_dispatch():
+    """Heterogeneous trajectories ride the SAME compiled executable as
+    uniform dispatches — schedule heterogeneity never compiles."""
+    opt = sgd(0.1)
+    ex = RoundExecutor(DFLConfig(tau1=4, tau2=3, topology=ring(N)),
+                       noisy_loss, opt)
+    stacked = stack_round_batches([batches_for(4, seed=i) for i in range(3)],
+                                  tau1_max=4)
+    st, _ = ex.dispatch(fresh_state(opt), stacked, 2, 2)
+    assert ex.compile_count == 1
+    st, _ = ex.dispatch_trajectory(
+        st, stacked, np.array([(4, 3), (1, 0), (2, 1)], np.int32))
+    st, _ = ex.dispatch_trajectory(
+        st, stacked, np.array([(1, 1), (4, 0), (3, 3)], np.int32))
+    assert ex.compile_count == 1
+
+
+def test_trajectory_static_fallback_segments():
+    """dynamic=False plays a trajectory as contiguous uniform segments
+    through the keyed cache: one compile per distinct (tau1, tau2), model
+    state identical to the dynamic path."""
+    opt = sgd(0.1)
+    schedule = np.array([(2, 1), (2, 1), (3, 2)], np.int32)
+    stacked = stack_round_batches([batches_for(3, seed=i) for i in range(3)],
+                                  tau1_max=3)
+    dyn = RoundExecutor(DFLConfig(tau1=3, tau2=2, topology=ring(N)),
+                        noisy_loss, opt)
+    want, m_dyn = dyn.dispatch_trajectory(fresh_state(opt), stacked, schedule)
+    ex = RoundExecutor(DFLConfig(tau1=3, tau2=2, topology=ring(N)),
+                       noisy_loss, opt, dynamic=False)
+    out, m = ex.dispatch_trajectory(fresh_state(opt), stacked, schedule)
+    assert ex.compile_count == 2          # two distinct (tau1, tau2) keys
+    assert_state_bitwise(want.params, out.params)
+    np.testing.assert_array_equal(np.asarray(m["tau1"]), [2, 2, 3])
+    np.testing.assert_array_equal(np.asarray(m["tau2"]), [1, 1, 2])
+    assert m["loss"].shape == (3,)
+
+
+def test_trajectory_validation():
+    opt = sgd(0.1)
+    ex = RoundExecutor(DFLConfig(tau1=3, tau2=2, topology=ring(N)),
+                       noisy_loss, opt)
+    stacked = stack_round_batches([batches_for(3)] * 2, tau1_max=3)
+    st = fresh_state(opt)
+    with pytest.raises(ValueError, match=r"\[K, 2\]"):
+        ex.dispatch_trajectory(st, stacked, np.array([2, 1], np.int32))
+    with pytest.raises(ValueError, match="K=2"):
+        ex.dispatch_trajectory(st, stacked,
+                               np.array([(2, 1)] * 3, np.int32))
+    with pytest.raises(ValueError, match="tau1=4"):
+        ex.dispatch_trajectory(st, stacked,
+                               np.array([(2, 1), (4, 1)], np.int32))
+    with pytest.raises(ValueError, match="tau2=3"):
+        ex.dispatch_trajectory(st, stacked,
+                               np.array([(2, 1), (2, 3)], np.int32))
+
+
 def test_superstep_round_idx_continues_across_dispatches():
     opt = sgd(0.1)
     ex = RoundExecutor(DFLConfig(tau1=2, tau2=1, topology=ring(N)),
@@ -295,6 +390,20 @@ def test_metrics_buffer_defers_and_amortizes():
     assert buf.pending_rounds == 0 and buf.flush() == []
 
 
+def test_metrics_buffer_uses_metric_carried_taus():
+    """Executor metrics tag each round with its realized (tau1, tau2);
+    the buffer's rows must report THOSE (heterogeneous trajectories), with
+    the push-args scalars as the legacy fallback."""
+    buf = MetricsBuffer()
+    m = {"loss": jnp.asarray([1.0, 2.0, 3.0]),
+         "tau1": jnp.asarray([2, 3, 1]), "tau2": jnp.asarray([1, 0, 2])}
+    buf.push(5, 3, None, None, m, dispatched_at=time.time())
+    rows = buf.flush()
+    assert [(r["tau1"], r["tau2"]) for r in rows] == [(2, 1), (3, 0), (1, 2)]
+    assert all(isinstance(r["tau1"], int) for r in rows)
+    assert [r["loss"] for r in rows] == [1.0, 2.0, 3.0]
+
+
 def test_executor_warmup_precompiles_without_stats():
     """warmup() pays the compile for a batch shape on a throwaway state
     copy: the first real dispatch at that shape then adds no compile, and
@@ -382,6 +491,39 @@ out, _ = ex.dispatch(out, stacked, 1, 3)   # re-plan: tau2-heavy
 assert ex.compile_count == 1, ex.compile_count
 print("SPARSE_SUPERSTEP_OK", err2)
 print("SPARSE_ZERO_RECOMPILE_OK")
+
+# heterogeneous [K, 2] trajectory on the sparse engine == the same
+# schedule as sequential static DENSE rounds (the numerical oracle), and
+# it rides the SAME executable as the uniform dispatches above. (st0 was
+# DONATED by the dispatches above — fresh same-key states here.)
+fresh = lambda: init_state({"w": jnp.zeros((17,))}, N, opt, jax.random.key(5))
+schedule = [(2, 2), (3, 0), (1, 1)]
+ref = fresh()
+for (t1, t2) in schedule:
+    cfg_s = DFLConfig(tau1=t1, tau2=t2, topology=topo)
+    ref, _ = jax.jit(make_round_fn(cfg_s, noisy_loss, opt))(ref, full[:t1])
+out, m = ex.dispatch_trajectory(fresh(), stacked, np.array(schedule, np.int32))
+err3 = float(jnp.max(jnp.abs(ref.params["w"] - out.params["w"])))
+assert err3 < 1e-5, f"sparse trajectory mismatch: {err3}"
+assert list(np.asarray(m["tau1"])) == [2, 3, 1]
+assert ex.compile_count == 1, ex.compile_count
+print("SPARSE_TRAJECTORY_OK", err3)
+
+# constrain guard: a >1-sized auto axis + constrain must raise loudly
+# (the re-assertion would be silently dropped); a node-only mesh accepts
+# and ignores it.
+mesh42 = jax.make_mesh((4, 2), ("data", "model"))
+cfg4 = DFLConfig(tau1=2, tau2=1, topology=ring(4))
+try:
+    make_round_fn(cfg4, noisy_loss, sgd(0.1), constrain=lambda t: t,
+                  engine="sparse", mesh=mesh42, node_axes=("data",))
+except NotImplementedError as e:
+    assert "constrain" in str(e)
+    print("SPARSE_CONSTRAIN_GUARD_OK")
+make_round_fn(DFLConfig(tau1=2, tau2=1, topology=topo), noisy_loss,
+              sgd(0.1), constrain=lambda t: t, engine="sparse", mesh=mesh,
+              node_axes=("data",))
+print("SPARSE_CONSTRAIN_IGNORED_OK")
 """
 
 
@@ -394,5 +536,6 @@ def test_sparse_executor_semantics():
     assert out.returncode == 0, out.stderr[-3000:]
     for tag in ["SPARSE_DYN_PLAIN_OK", "SPARSE_DYN_CDFL_OK",
                 "SPARSE_DYN_KERNELS_OK", "SPARSE_SUPERSTEP_OK",
-                "SPARSE_ZERO_RECOMPILE_OK"]:
+                "SPARSE_ZERO_RECOMPILE_OK", "SPARSE_TRAJECTORY_OK",
+                "SPARSE_CONSTRAIN_GUARD_OK", "SPARSE_CONSTRAIN_IGNORED_OK"]:
         assert tag in out.stdout, (tag, out.stdout, out.stderr[-2000:])

@@ -25,15 +25,35 @@ def test_reduced_round_lowers_and_runs(mesh):
 
 
 def test_reduced_superstep_lowers(mesh):
-    """The fused K-round dynamic-tau superstep is a lowerable production
-    artifact: donated state carry, replicated int32 tau scalars, stacked
-    [K] metrics."""
+    """The fused K-round superstep is a lowerable production artifact:
+    donated state carry, a replicated [K, 2] int32 schedule TRAJECTORY
+    scanned as xs (round k runs taus[k]), stacked [K] metrics tagged with
+    the realized schedule."""
     arch = REGISTRY["qwen3-1.7b"]
     built = S.build_train_superstep(arch, "train_4k", mesh, rounds=2,
                                     tau1_max=3, tau2_max=2, reduced=True)
     assert built.meta["kind"] == "superstep"
     assert built.meta["rounds"] == 2 and built.meta["tau1_max"] == 3
+    assert built.meta["schedule"] == "trajectory"
+    taus_abs = built.args[-1]
+    assert taus_abs.shape == (2, 2) and taus_abs.dtype == jnp.int32
     assert built.lower() is not None
+
+
+def test_plan_train_schedule_roofline_measured(mesh):
+    """use_roofline=True feeds the compiled local step's MEASURED FLOPs
+    (and measured collective bytes, when the lowering has any) into the
+    planner instead of the 6*P*tokens estimate."""
+    arch = REGISTRY["qwen3-1.7b"]
+    measured = S.roofline_cost_inputs(arch, "train_4k", mesh, reduced=True)
+    assert measured["step_flops"] > 0
+    # single-device host mesh mixes in registers: documented 0-collective
+    # fallback to the analytic wire size
+    assert measured["gossip_collective_bytes"] == 0.0
+    p = S.plan_train_schedule(arch, "train_4k", mesh, budget_s=3600.0,
+                              reduced=True, use_roofline=True)
+    assert p.tau1 >= 1 and p.tau2 >= 1
+    assert p.round_cost.time_s > 0
 
 
 def test_reduced_decode_lowers(mesh):

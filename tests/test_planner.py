@@ -16,9 +16,11 @@ from benchmarks.theory_check import run_dfl_quadratic
 from repro.core.compression import QSGD, TopK
 from repro.core.topology import fully_connected, ring, star
 from repro.planner import (AdaptiveController, Budget, ComputeModel,
-                           CostModel, LinkModel, WirelessLinks, bounds,
-                           evaluate_grid, plan, rounds_within, select_plan,
-                           unit_cost_model, wireless_link)
+                           CostModel, CostProcess, Episode, LinkModel,
+                           WirelessLinks, bounds, edge_outage,
+                           evaluate_grid, faded_links, plan,
+                           plan_trajectory, rounds_within, select_plan,
+                           straggler_links, unit_cost_model, wireless_link)
 
 # -- the quadratic testbed shared by the acceptance tests -------------------
 
@@ -160,6 +162,129 @@ def test_plan_infeasible_budget_raises():
     with pytest.raises(ValueError):
         plan(Budget(wall_clock_s=0.5), cm, sigma=1.0, f_gap=1.0,
              grid=[(4, 4)])
+
+
+# -- time-varying processes & per-round trajectories ------------------------
+
+
+def _wireless_unit(t_gossip: float):
+    """WirelessLinks pricing one gossip step at ``t_gossip`` units."""
+    copy_bytes = 32.0 * DIM / 8.0
+    return WirelessLinks(default=LinkModel(bytes_per_s=copy_bytes / t_gossip))
+
+
+def _process(episodes=()):
+    base = CostModel(compute=ComputeModel(1.0, 1.0),
+                     link=_wireless_unit(1.0), topology=TOPO,
+                     model_bits=32.0 * DIM)
+    return CostProcess(base=base, episodes=tuple(episodes))
+
+
+def test_link_helpers_price_per_edge():
+    """straggler slows ONLY the touched edges (each exactly once), fading
+    slows everything, outage drops named edges to a residual rate."""
+    wl = _wireless_unit(1.0)
+    strag = straggler_links(wl, TOPO, 0, 10.0)
+    assert strag.link(0, 1).bytes_per_s == pytest.approx(
+        wl.default.bytes_per_s / 10.0)   # scaled ONCE, not once per side
+    assert strag.link(0, 7).bytes_per_s == pytest.approx(
+        wl.default.bytes_per_s / 10.0)
+    assert strag.link(2, 3).bytes_per_s == wl.default.bytes_per_s
+    fade = faded_links(wl, 10.0)
+    assert fade.link(2, 3).bytes_per_s == pytest.approx(
+        wl.default.bytes_per_s / 10.0)
+    out = edge_outage(wl, [(3, 2)], residual=1e-3)
+    assert out.link(2, 3).bytes_per_s == pytest.approx(
+        wl.default.bytes_per_s * 1e-3)
+    assert out.link(0, 1).bytes_per_s == wl.default.bytes_per_s
+    # one slow edge gates the whole synchronous gossip step
+    cm = CostModel(compute=ComputeModel(1.0, 1.0), link=strag,
+                   topology=TOPO, model_bits=32.0 * DIM)
+    assert cm.t_gossip_step() == pytest.approx(10.0)
+
+
+def test_cost_process_episode_windows_and_compute_scale():
+    proc = _process([Episode(10.0, 20.0, link=faded_links(
+        _wireless_unit(1.0), 50.0), compute_scale=2.0, label="ep")])
+    assert not proc.is_static and proc.horizon() == 20.0
+    assert proc.at(5.0).t_gossip_step() == pytest.approx(1.0)
+    assert proc.at(15.0).t_gossip_step() == pytest.approx(50.0)
+    assert proc.at(15.0).compute.t_step == pytest.approx(2.0)
+    assert proc.at(20.0).t_gossip_step() == pytest.approx(1.0)  # half-open
+    assert _process().is_static
+
+
+def test_plan_trajectory_degenerates_to_plan_when_time_invariant():
+    """The satellite acceptance: a static process yields EXACTLY the fixed
+    plan's schedule, repeated."""
+    f_gap, sig_eff = _testbed_constants()
+    proc = _process()
+    budget = Budget(wall_clock_s=proc.base.round_cost(2, 2).time_s
+                    * REF_ROUNDS)
+    p = plan(budget, proc.base, sigma=sig_eff, f_gap=f_gap, grid=GRID)
+    tp = plan_trajectory(budget, proc, rounds=40, sigma=sig_eff,
+                         f_gap=f_gap, grid=GRID)
+    assert tp.rounds == min(p.rounds, 40)
+    assert all((t1, t2) == (p.tau1, p.tau2) for (t1, t2) in tp.taus)
+    assert tp.steps[0].eta == p.eta
+    assert tp.total_time_s == pytest.approx(
+        p.round_cost.time_s * tp.rounds)
+    assert tp.tau_maxima == (p.tau1, p.tau2)
+
+
+def test_plan_trajectory_shifts_through_episodes():
+    """During an outage-severity episode the per-round schedule drops
+    gossip (tau2-light / compute-only rounds); off-episode it keeps the
+    base plan's balance — and the whole trajectory respects the budget on
+    the process clock."""
+    f_gap, sig_eff = _testbed_constants()
+    grid = GRID + [(1, 0), (8, 0)]
+    ep_link = straggler_links(_wireless_unit(1.0), TOPO, 0, 1000.0)
+    proc = _process([Episode(30.0, 90.0, link=ep_link)])
+    budget = Budget(wall_clock_s=150.0)
+    tp = plan_trajectory(budget, proc, rounds=500, sigma=sig_eff,
+                         f_gap=f_gap, grid=grid)
+    assert tp.total_time_s <= 150.0 + 1e-9
+    # walk the clock: split rounds into off-episode and in-episode
+    clock, in_ep, off_ep = 0.0, [], []
+    for p in tp.steps:
+        (in_ep if 30.0 <= clock < 90.0 else off_ep).append((p.tau1, p.tau2))
+        clock += p.round_cost.time_s
+    assert in_ep and off_ep
+    # every in-episode round avoids the ruinous gossip entirely
+    assert all(t2 == 0 for _, t2 in in_ep), in_ep
+    # off-episode rounds gossip (the base tariff makes it worthwhile)
+    assert any(t2 >= 1 for _, t2 in off_ep), off_ep
+
+
+def test_plan_trajectory_infeasible_budget_raises():
+    with pytest.raises(ValueError):
+        plan_trajectory(Budget(wall_clock_s=0.5), _process(), rounds=10,
+                        sigma=1.0, f_gap=1.0, grid=[(4, 4)])
+
+
+def test_bounds_reject_standing_tau2_zero():
+    """tau2 = 0 on a non-complete graph is a never-gossip POLICY: no
+    finite bound, no admissible eta — it stays a last-resort trajectory
+    grid point via select_plan's tie-break."""
+    assert not bounds.lr_condition_19(0.01, 4, 0, TOPO)
+    assert bounds.bound_20(0.01, 4, 0, TOPO, 100, 1.0, 1.0, 8) == float("inf")
+    ev = bounds.predicted_loss_decrement(4, 0, TOPO, 1.0, T=100, f_gap=1.0)
+    assert ev.bound == float("inf")
+    # the complete graph is no exception: tau2 = 0 means no communication
+    # STEPS at all, however fast the graph would mix — including
+    # fully_connected(2), whose zeta computes to EXACTLY 0.0 (the guard
+    # is num_nodes > 1, not float-noise zeta > 0)
+    for full in (fully_connected(8), fully_connected(2)):
+        assert bounds.predicted_loss_decrement(
+            4, 0, full, 1.0, T=100, f_gap=1.0).bound == float("inf")
+        assert not bounds.lr_condition_19(0.01, 4, 0, full)
+        assert bounds.max_eta_19(4, 0, full) == 0.0
+        assert bounds.bound_20(0.01, 4, 0, full, 100, 1.0, 1.0,
+                               full.num_nodes) == float("inf")
+    # a single node has no consensus to lose: tau2 = 0 stays finite
+    assert np.isfinite(bounds.predicted_loss_decrement(
+        4, 0, fully_connected(1), 1.0, T=100, f_gap=1.0).bound)
 
 
 # -- deprecation shim -------------------------------------------------------
@@ -311,6 +436,138 @@ def test_adaptive_rank_deficient_fallback_scales_prior():
     assert fitted.t_gossip_step(None) == pytest.approx(10.0, rel=1e-6)
 
 
+def test_adaptive_probes_rank_deficient_fit_then_replans():
+    """All history at one schedule -> the boundary emits a PROBE (a
+    rank-raising grid schedule, cause "probe") instead of re-planning off
+    the unidentifiable scaled fit; once the probe's rounds are measured
+    the next boundary is a real re-plan off a rank-2 fit."""
+    ctrl = _controller(ratio_prior=0.2, budget_s=1e5, replan_every=3)
+    p = ctrl.initial_plan()
+    t_step, t_gossip = 1.0, 25.0
+    rows = np.array([[p.tau1, p.tau2]], dtype=float)
+    for r in range(1, 4):
+        ctrl.observe(p.tau1, p.tau2, p.tau1 * t_step + p.tau2 * t_gossip)
+    probe = ctrl.maybe_replan(3)
+    assert probe is not None
+    assert ctrl.history[-1]["cause"] == "probe"
+    # the probe row makes the fit full-rank BY CONSTRUCTION
+    rows = np.vstack([rows, [probe.tau1, probe.tau2]])
+    assert np.linalg.matrix_rank(rows) == 2
+    for r in range(4, 7):
+        ctrl.observe(probe.tau1, probe.tau2,
+                     probe.tau1 * t_step + probe.tau2 * t_gossip)
+    assert ctrl.fit_rank() == 2
+    ctrl.maybe_replan(6)
+    assert ctrl.history[-1]["cause"] == "replan"
+    fitted = ctrl.fitted_cost_model()
+    assert fitted.compute.t_step == pytest.approx(t_step, rel=1e-3)
+    assert fitted.t_gossip_step(None) == pytest.approx(t_gossip, rel=1e-3)
+
+
+def test_next_trajectory_uniform_chunk_and_probe_ride():
+    """Without a process the emitted chunk is the fitted plan's schedule
+    uniformly — except a probe riding the LAST round when the fit is
+    rank-deficient; the trajectory event lands in the history."""
+    ctrl = _controller(ratio_prior=1.0, budget_s=1e5)
+    p = ctrl.initial_plan()
+    taus = ctrl.next_trajectory(4)
+    # no observations yet: no probe, uniform current plan
+    assert taus.shape == (4, 2)
+    assert all((t1, t2) == (p.tau1, p.tau2) for (t1, t2) in taus)
+    for (t1, t2) in taus:
+        ctrl.observe(int(t1), int(t2), 5.0)
+    taus2 = ctrl.next_trajectory(4, round_idx=4)
+    assert taus2 is not None and ctrl.fit_rank() < 2
+    head, probe = taus2[:-1], taus2[-1]
+    assert np.linalg.matrix_rank(
+        np.vstack([ctrl._obs_rows(), probe[None].astype(float)])) == 2
+    ev = ctrl.history[-1]
+    assert ev["cause"] == "trajectory"
+    assert ev["probe"] == [int(probe[0]), int(probe[1])]
+    assert len(ev["schedule"]) == 4
+
+
+def test_next_trajectory_with_known_process_routes_around_episode():
+    """A controller given a KNOWN episode process emits heterogeneous
+    chunks: the episode rounds drop gossip while off-episode rounds keep
+    it (re-planning INSIDE the superstep)."""
+    f_gap, sig_eff = _testbed_constants()
+    grid = GRID + [(1, 0), (8, 0)]
+    copy_bytes = 32.0 * DIM / 8.0
+    wl = WirelessLinks(default=LinkModel(bytes_per_s=copy_bytes))
+    base = CostModel(compute=ComputeModel(1.0, 1.0), link=wl,
+                     topology=TOPO, model_bits=32.0 * DIM)
+    proc = CostProcess(base=base, episodes=(
+        Episode(6.0, 200.0, link=straggler_links(wl, TOPO, 0, 1000.0)),))
+    ctrl = AdaptiveController(Budget(wall_clock_s=300.0), base,
+                              sigma=sig_eff, f_gap=f_gap, grid=grid,
+                              process=proc)
+    ctrl.initial_plan()
+    taus = ctrl.next_trajectory(12)
+    assert taus is not None
+    # the chunk starts at clock 0 (off-episode, gossip worthwhile) and
+    # crosses into the episode (compute-only rounds)
+    assert taus[0][1] >= 1, taus
+    assert any(t2 == 0 for _, t2 in taus), taus
+
+
+def test_observe_chunk_aggregates_heterogeneous_supersteps():
+    """A fused heterogeneous superstep is only host-timed as a WHOLE:
+    observe_chunk enters ONE (sum tau1, sum tau2) fit row, so mixed-
+    schedule chunks (probe included) identify the true per-step times
+    exactly — per-round amortized times would corrupt the fit."""
+    t_step, t_gossip = 1.0, 25.0
+    ctrl = _controller(ratio_prior=1.0, budget_s=1e6)
+    ctrl.initial_plan()
+
+    def chunk_seconds(taus):
+        return sum(t1 * t_step + t2 * t_gossip for (t1, t2) in taus)
+
+    uniform = [(4, 1)] * 5
+    with_probe = [(4, 1)] * 4 + [(1, 4)]
+    ctrl.observe_chunk(uniform, chunk_seconds(uniform))
+    assert ctrl.fit_rank() == 1 and len(ctrl.observations) == 1
+    assert ctrl.observations[0].tau1 == 20 and ctrl.observations[0].tau2 == 5
+    ctrl.observe_chunk(with_probe, chunk_seconds(with_probe))
+    assert ctrl.fit_rank() == 2
+    fitted = ctrl.fitted_cost_model()
+    assert fitted.compute.t_step == pytest.approx(t_step, rel=1e-6)
+    assert fitted.t_gossip_step(None) == pytest.approx(t_gossip, rel=1e-6)
+    # budget spend matches the measured chunk totals
+    assert ctrl.spent_s == pytest.approx(chunk_seconds(uniform)
+                                         + chunk_seconds(with_probe))
+
+
+def test_next_trajectory_probe_skipped_when_unaffordable():
+    """A rank-raising probe that would blow the remaining budget is
+    dropped (the chunk keeps its planned schedule) rather than dispatched
+    past the envelope."""
+    cm = unit_cost_model(TOPO, 100.0)   # gossip brutally expensive
+    f_gap, sig_eff = _testbed_constants()
+    ctrl = AdaptiveController(Budget(wall_clock_s=250.0), cm,
+                              sigma=sig_eff, f_gap=f_gap,
+                              grid=[(1, 0), (2, 0), (8, 1)])
+    ctrl.initial_plan()
+    p = ctrl.current
+    for _ in range(3):
+        ctrl.observe(p.tau1, p.tau2, 1.0)
+    taus = ctrl.next_trajectory(4, round_idx=3)
+    assert taus is not None
+    ev = ctrl.history[-1]
+    if ev["probe"] is not None:   # probe only rides when it fits
+        t1, t2 = ev["probe"]
+        rc = ctrl.cost_model.round_cost(t1, t2)
+        assert rc.time_s <= 250.0 - ctrl.spent_s
+
+
+def test_next_trajectory_exhaustion():
+    ctrl = _controller(ratio_prior=1.0, budget_s=10.0)
+    p = ctrl.initial_plan()
+    ctrl.observe(p.tau1, p.tau2, 50.0)   # blow the whole budget
+    assert ctrl.next_trajectory(4, round_idx=1) is None
+    assert ctrl.exhausted
+
+
 def test_adaptive_energy_budget_spend_down():
     """An energy-only budget is spent down analytically per round and
     triggers exhaustion; the fitted model keeps the energy prices."""
@@ -380,6 +637,33 @@ def test_train_cli_adaptive_session(tmp_path):
     # re-planned schedules are the ones the rounds actually ran
     assert (events[0]["tau1"], events[0]["tau2"]) == (h["tau1"][0],
                                                      h["tau2"][0])
+
+
+def test_train_cli_trajectory_session(tmp_path):
+    """`train.py --schedule trajectory` end-to-end: per-round [K, 2]
+    schedules dispatched inside supersteps, the realized schedule in the
+    history JSON's ``schedule`` field, and ZERO recompiles after warmup."""
+    from repro.launch import train as train_cli
+
+    out = tmp_path / "hist.json"
+    train_cli.main([
+        "--arch", "qwen3-1.7b", "--nodes", "2", "--rounds", "6",
+        "--batch", "1", "--seq", "16", "--plan-budget", "3600",
+        "--schedule", "trajectory", "--superstep", "3",
+        "--log-every", "10", "--history-out", str(out)])
+    import json
+
+    h = json.loads(out.read_text())
+    assert h["schedule_mode"] == "trajectory"
+    assert len(h["round"]) == 6
+    # the realized per-round schedule field mirrors the tau columns
+    assert h["schedule"] == [[t1, t2] for t1, t2 in
+                             zip(h["tau1"], h["tau2"])]
+    assert all(t1 >= 1 for t1, _ in h["schedule"])
+    # trajectory re-plans are schedule DATA: zero recompiles after warmup
+    assert h["compile_count"] == h["compile_count_warmup"]
+    causes = {e["cause"] for e in h["plan_events"]}
+    assert "initial" in causes and "trajectory" in causes
 
 
 def test_build_planned_round_smoke():
