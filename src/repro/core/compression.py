@@ -17,7 +17,14 @@ Operators implemented (paper Sec. V-A list):
 
 The QSGD and TopK hot loops have Pallas TPU kernels in ``repro.kernels``;
 this module is the pure-jnp reference implementation used by the algorithm
-layer (and as the kernels' oracle).
+layer (and as the kernels' oracle). ``TopK(use_kernels=True)`` (or
+``make_compressor("top_k", use_kernels=True)``) routes ``__call__``
+through the kernel-backed two-pass select+mask (``ops.top_k_compress``),
+which is BITWISE-equal to the reference here — threshold, inclusive tie
+handling and all — so flipping the flag never changes trajectories. The
+sharded engine's ``use_kernels`` hot path additionally fuses compression
+into the CHOCO move (``substrate.ShardedSubstrate.choco_step``); see
+docs/ARCHITECTURE.md for the dispatch path.
 """
 from __future__ import annotations
 
@@ -68,10 +75,19 @@ class Identity(Compressor):
 
 @dataclasses.dataclass(frozen=True)
 class TopK(Compressor):
-    """Keep the ceil(frac*d) largest-|.| coordinates; zero the rest."""
+    """Keep the ceil(frac*d) largest-|.| coordinates; zero the rest.
+
+    ``delta = k/d`` (Assumption 2 holds with equality in the worst case);
+    wire cost is value + index bits per kept coordinate. ``use_kernels``
+    dispatches ``__call__`` to the Pallas two-pass kernel
+    (``repro.kernels.ops.top_k_compress``) — bitwise-identical output
+    (same k-th-largest threshold, same inclusive tie handling), kernel
+    tiling off the hot loop's critical path on TPU.
+    """
 
     name: str = "top_k"
     frac: float = 0.5
+    use_kernels: bool = False
 
     def _k(self, d: int) -> int:
         return max(1, int(np.ceil(self.frac * d)))
@@ -87,6 +103,10 @@ class TopK(Compressor):
     def __call__(self, x: jnp.ndarray, key: Optional[jax.Array]) -> jnp.ndarray:
         flat = x.reshape(-1)
         k = self._k(flat.size)
+        if self.use_kernels:
+            from repro.kernels import ops as kernel_ops
+
+            return kernel_ops.top_k_compress(x, k)
         # threshold = k-th largest magnitude; ties keep >= threshold (may keep
         # a few extra ties — still satisfies Assumption 2).
         thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
@@ -184,6 +204,13 @@ _REGISTRY = {
 
 
 def make_compressor(name: str, **kwargs) -> Compressor:
+    """Build a registered compressor by name with its dataclass kwargs.
+
+    Names: "identity", "top_k" (``frac``, ``use_kernels``), "rand_k"
+    (``frac``), "qsgd" (``levels``), "rand_gossip" (``p``). The planner
+    (``repro.planner.cost``) prices wire bits through the instance's
+    ``bits_per_value``/``delta`` contracts (see docs/THEORY.md).
+    """
     try:
         return _REGISTRY[name](**kwargs)
     except KeyError:

@@ -294,7 +294,9 @@ def _communicate_choco(
 ) -> Tuple[PyTree, PyTree]:
     """tau2 CHOCO-G compressed gossip steps (Alg. 2 lines 6-11), shared by
     both engines: Y is mixed by ``sub.mix`` (dense einsum / ppermute), then
-    x += gamma (C Y - Y), then Q(x - Y) updates Y — with per-node keys
+    ``sub.choco_step`` runs the move + compress + estimate update — the
+    unfused composition by default, or the single-pass fused kernel on the
+    sharded substrate under ``use_kernels`` — with per-node keys
     fold_in(fold_in(rng, t), node) on either substrate.
 
     ``tau2``: optional TRACED int32 step count (dynamic-tau executor) —
@@ -308,11 +310,8 @@ def _communicate_choco(
     def one_step(carry, t):
         x, y = carry
         mixed_y = sub.mix(y)
-        x_new, diff = sub.choco_move(x, y, mixed_y, cfg.gamma)
         keys = sub.node_keys(jax.random.fold_in(rng, t))
-        q = sub.vmap(lambda d, k: sub.compress(comp, d, k))(diff, keys)
-        y_new = jax.tree_util.tree_map(lambda b, qq: b + qq, y, q)
-        return (x_new, y_new)
+        return sub.choco_step(comp, x, y, mixed_y, cfg.gamma, keys)
 
     if tau2 is None:
         (params, hat), _ = jax.lax.scan(

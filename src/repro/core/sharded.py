@@ -8,7 +8,10 @@ is manual ONLY over the node mesh axes; the gossip stage is per-neighbor
 path's N-1-copy all-gather). Supports plain DFL and CHOCO-G C-DFL
 (compression applied node-locally, neighbor estimates fetched by ppermute —
 equivalent to Alg. 2's replicated w_hat bookkeeping), plus the Pallas
-kernel hot path (``use_kernels=True``; see ``repro.kernels``).
+kernel hot path (``use_kernels=True``: kernel gossip accumulate and the
+FUSED CHOCO compress-and-move for QSGD/TopK via
+``ShardedSubstrate.choco_step`` — dispatch rules in
+``repro.kernels.registry``, path diagram in docs/ARCHITECTURE.md).
 
 This module owns ONLY the shard_map plumbing (specs, squeeze/unsqueeze of
 the local node dim). The round itself — local-update scan, CHOCO step, RNG

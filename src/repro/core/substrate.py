@@ -173,6 +173,19 @@ class NodeSubstrate:
 
         return compress_tree(comp, tree, key)
 
+    def choco_step(self, comp, x: PyTree, y: PyTree, mixed_y: PyTree,
+                   gamma: float, keys) -> Tuple[PyTree, PyTree]:
+        """One full CHOCO-G inner iteration AFTER the mix (Alg. 2
+        l.6-7,11): consensus move, compress the gap, update the shared
+        estimates. Returns (x_new, y_new). The default is the unfused
+        composition both engines executed historically (bit-identical);
+        ``ShardedSubstrate`` overrides it with the single-pass fused
+        kernel when ``use_kernels`` and Q is QSGD/TopK."""
+        x_new, diff = self.choco_move(x, y, mixed_y, gamma)
+        q = self.vmap(lambda d, k: self.compress(comp, d, k))(diff, keys)
+        y_new = jax.tree_util.tree_map(lambda b, qq: b + qq, y, q)
+        return x_new, y_new
+
     def consensus_sq(self, params: PyTree) -> jnp.ndarray:
         """||X (I - J)||_F^2 / N (Lemma 1's drift), via per-node deviation
         from the node mean."""
@@ -221,9 +234,15 @@ class ShardedSubstrate(NodeSubstrate):
     mesh axes in ``node_axes`` enumerate nodes. Requires a circulant C
     (``topology.is_shift_structured()``); gossip is one ppermute per shift.
 
-    ``use_kernels`` routes the gossip accumulate and the CHOCO move through
-    the Pallas kernels in ``repro.kernels.ops`` (interpret mode off-TPU;
-    validated against kernels/ref.py oracles in tests/test_kernels.py).
+    ``use_kernels`` routes the hot path through the Pallas kernels in
+    ``repro.kernels.ops`` (dispatch per ``repro.kernels.registry``:
+    Mosaic on TPU, interpret off-TPU, validated against kernels/ref.py
+    oracles in tests/test_kernels.py): the gossip accumulate
+    (``gossip_mix``), and for C-DFL the FUSED compress-and-move step
+    (``choco_qsgd_move`` / ``choco_topk_move`` — one kernel pass emits
+    (x_new, y_new) instead of the move -> compress -> add chain). Other
+    compressors fall back to the unfused ``choco_move`` kernel plus the
+    library compressor.
     """
 
     def __init__(self, topology, node_axes: Sequence[str],
@@ -295,23 +314,68 @@ class ShardedSubstrate(NodeSubstrate):
         return x_new, diff
 
     def compress(self, comp, tree, key):
-        from repro.core.compression import QSGD
+        from repro.core.compression import QSGD, TopK
 
-        if not (self.use_kernels and isinstance(comp, QSGD)):
+        if not (self.use_kernels and isinstance(comp, (QSGD, TopK))):
             return super().compress(comp, tree, key)
         from repro.kernels import ops as kernel_ops
 
         # Same per-leaf key split and uniform noise as compression.QSGD, so
         # the kernel output is bit-identical to the library compressor
-        # (tests/test_kernels.py::test_qsgd_kernel_agrees_with_library_compressor).
+        # (tests/test_kernels.py::test_qsgd_kernel_agrees_with_library_compressor);
+        # the TopK kernel path is bitwise by construction (same threshold,
+        # same inclusive tie mask — see repro.kernels.topk).
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         keys = jax.random.split(key, max(len(leaves), 1))
-        out = [
-            kernel_ops.qsgd_quantize(
-                leaf, jax.random.uniform(k, leaf.shape), levels=comp.levels)
-            for leaf, k in zip(leaves, keys)
-        ]
+        if isinstance(comp, TopK):
+            out = [kernel_ops.top_k_compress(leaf, comp._k(leaf.size))
+                   for leaf in leaves]
+        else:
+            out = [
+                kernel_ops.qsgd_quantize(
+                    leaf, jax.random.uniform(k, leaf.shape),
+                    levels=comp.levels)
+                for leaf, k in zip(leaves, keys)
+            ]
         return jax.tree_util.tree_unflatten(treedef, out)
+
+    def choco_step(self, comp, x, y, mixed_y, gamma, keys):
+        """Fused CHOCO compress-and-move: one kernel pass per leaf emits
+        (x_new, y_new) directly (``repro.kernels.choco_fused``) instead
+        of the move -> compress -> add chain with its three separate
+        padded buffer round-trips. Engaged for QSGD and TopK under
+        ``use_kernels``; other compressors keep the unfused composition.
+        RNG discipline matches ``compression.compress_tree`` exactly: one
+        fold_in'ed key per leaf, uniform noise drawn per QSGD leaf (TopK
+        draws nothing). Numerics vs the unfused chain (f32, under jit):
+        x_new bitwise for both compressors; y_new bitwise for TopK (the
+        mask reads the same materialized gap its threshold was selected
+        from) and within 1 f32 ulp for QSGD (the reconstruction multiply
+        chain may round differently across separately-compiled kernels —
+        the quantization level picked is identical). See
+        tests/test_kernels.py and docs/ARCHITECTURE.md."""
+        from repro.core.compression import QSGD, TopK
+
+        if not (self.use_kernels and isinstance(comp, (QSGD, TopK))):
+            return super().choco_step(comp, x, y, mixed_y, gamma, keys)
+        from repro.kernels import ops as kernel_ops
+
+        leaves_x, treedef = jax.tree_util.tree_flatten(x)
+        leaves_y = jax.tree_util.tree_leaves(y)
+        leaves_my = jax.tree_util.tree_leaves(mixed_y)
+        leaf_keys = jax.random.split(keys, max(len(leaves_x), 1))
+        moved = []
+        for lx, ly, lmy, k in zip(leaves_x, leaves_y, leaves_my, leaf_keys):
+            if isinstance(comp, TopK):
+                moved.append(kernel_ops.choco_topk_move(
+                    lx, ly, lmy, gamma, comp._k(lx.size)))
+            else:
+                noise = jax.random.uniform(k, lx.shape)
+                moved.append(kernel_ops.choco_qsgd_move(
+                    lx, ly, lmy, gamma, noise, levels=comp.levels))
+        x_new = jax.tree_util.tree_unflatten(treedef, [m[0] for m in moved])
+        y_new = jax.tree_util.tree_unflatten(treedef, [m[1] for m in moved])
+        return x_new, y_new
 
     def mean_over_nodes(self, x):
         return jax.lax.pmean(x, self.axis)

@@ -7,6 +7,13 @@ C-DFL's inner communication step (Alg. 2 lines 6-7) per node i:
 
 Unfused: 3 reads + 2 intermediate writes over the model; the kernel emits
 both outputs in a single VMEM pass. gamma arrives as a (1,1) scalar tile.
+
+For QSGD/TopK compressors the whole inner iteration (move + compress +
+estimate update) is further fused into one pass by
+``repro.kernels.choco_fused`` — this kernel remains the building block
+for every OTHER compressor on the ``use_kernels`` path, and the
+reference the fused kernels are tested against. Dispatch (Mosaic /
+interpret / fallback) is decided per call by ``repro.kernels.registry``.
 """
 from __future__ import annotations
 

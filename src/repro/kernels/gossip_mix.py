@@ -7,7 +7,10 @@ vector; the kernel performs the whole weighted sum in one VMEM pass with a
 f32 accumulator (the per-byte hot loop of the paper's inter-node
 communication stage, run tau2 times per round).
 
-Neighbors arrive stacked [deg, rows, 128]; weights as a (1, deg) tile.
+Neighbors arrive stacked [deg, rows, 128]; weights as a (1, deg+1) tile.
+Entry point: ``repro.kernels.ops.gossip_mix`` (pad/unpad handling,
+per-call Mosaic/interpret dispatch via ``repro.kernels.registry``);
+consumed by ``ShardedSubstrate.mix`` under ``use_kernels=True``.
 """
 from __future__ import annotations
 

@@ -13,6 +13,10 @@ against the pure-jnp oracle in interpret mode.
 TPU tiling: the flat vector is reshaped to (rows, 128) lanes and blocked
 (BLOCK_ROWS, 128) = 256x128 f32 = 128 KiB per buffer — three live buffers
 (x, xi, out) with double buffering stay well under the ~16 MiB VMEM budget.
+
+Entry point: ``repro.kernels.ops.qsgd_quantize`` (pad/unpad handling,
+per-call Mosaic/interpret dispatch via ``repro.kernels.registry``). The
+CHOCO hot path uses the fused variant in ``choco_fused`` instead.
 """
 from __future__ import annotations
 

@@ -1,4 +1,12 @@
-"""Pure-jnp oracles for the Pallas kernels (the source of truth in tests)."""
+"""Pure-jnp oracles for the Pallas kernels (the source of truth in tests).
+
+Each kernel in this package has exactly one oracle here, registered next
+to it in ``repro.kernels.registry`` so the parity harness (and
+``benchmarks/bench_kernels``) can sweep kernel-vs-oracle agreement
+mechanically. Oracles take the SAME explicit randomness (noise tensors,
+thresholds) as the kernels, so agreement is checked bitwise where the
+arithmetic allows, not just statistically.
+"""
 from __future__ import annotations
 
 import jax
@@ -32,3 +40,33 @@ def choco_move_ref(x: jnp.ndarray, y: jnp.ndarray, mixed_y: jnp.ndarray,
     x32, y32, my32 = (t.astype(jnp.float32) for t in (x, y, mixed_y))
     x_new = x32 + gamma * (my32 - y32)
     return x_new.astype(x.dtype), (x_new - y32).astype(x.dtype)
+
+
+def top_k_ref(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Matches repro.core.compression.TopK.__call__ for a given k:
+    threshold = k-th largest |x| (input dtype), ties kept inclusively."""
+    flat = x.reshape(-1)
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    kept = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0)
+    return kept.reshape(x.shape).astype(x.dtype)
+
+
+def choco_qsgd_ref(x: jnp.ndarray, y: jnp.ndarray, mixed_y: jnp.ndarray,
+                   gamma: float, noise: jnp.ndarray, *, levels: int,
+                   c: float):
+    """Unfused composition the fused QSGD kernel must reproduce:
+    choco_move -> materialize diff in the leaf dtype -> qsgd_ref on it ->
+    y_new = y + q in the leaf dtype. Returns (x_new, y_new)."""
+    x_new, diff = choco_move_ref(x, y, mixed_y, gamma)
+    q = qsgd_ref(diff, noise, levels=levels, c=c)
+    return x_new, y + q
+
+
+def choco_topk_ref(x: jnp.ndarray, y: jnp.ndarray, mixed_y: jnp.ndarray,
+                   gamma: float, k: int):
+    """Unfused composition the fused TopK kernel must reproduce:
+    choco_move -> top_k_ref on the leaf-dtype diff -> y_new = y + q.
+    Returns (x_new, y_new)."""
+    x_new, diff = choco_move_ref(x, y, mixed_y, gamma)
+    q = top_k_ref(diff, k)
+    return x_new, y + q

@@ -65,6 +65,21 @@ def memory_tokens_for(cfg: ModelConfig, shape: InputShape) -> int:
     return cfg.memory_tokens
 
 
+def kernelize_compressor(compression: Optional[Compressor],
+                         use_kernels: bool) -> Optional[Compressor]:
+    """``use_kernels`` engages the kernel-backed TopK on ANY engine: the
+    sparse substrate fuses compress-and-move itself
+    (``substrate.ShardedSubstrate.choco_step``), but the dense engine
+    compresses through the Compressor instance — so carry the flag on it
+    (the kernel TopK is bitwise-identical to the reference, see
+    ``repro.core.compression.TopK``). Other compressors pass through."""
+    from repro.core.compression import TopK
+
+    if use_kernels and isinstance(compression, TopK):
+        return dataclasses.replace(compression, use_kernels=True)
+    return compression
+
+
 def dfl_setup(arch: ArchConfig, mesh: Mesh, *, tau1: int, tau2: int,
               compression: Optional[Compressor], mixing_impl: str,
               topology: str = "ring"):
@@ -387,6 +402,7 @@ def build_train_round(
 ) -> Built:
     cfg = arch.reduced if reduced else arch.model
     shape = SHAPES[shape_name]
+    compression = kernelize_compressor(compression, use_kernels)
     mode, n, dcfg = dfl_setup(arch, mesh, tau1=tau1, tau2=tau2,
                               compression=compression,
                               mixing_impl=mixing_impl, topology=topology)
@@ -449,6 +465,7 @@ def build_train_superstep(
     """
     cfg = arch.reduced if reduced else arch.model
     shape = SHAPES[shape_name]
+    compression = kernelize_compressor(compression, use_kernels)
     mode, n, dcfg = dfl_setup(arch, mesh, tau1=tau1_max, tau2=tau2_max,
                               compression=compression,
                               mixing_impl="dense", topology=topology)

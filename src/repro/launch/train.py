@@ -60,6 +60,7 @@ from repro.core import (DFLConfig, HostPrefetcher, MetricsBuffer,
                         paper_quasi_ring)
 from repro.core.compression import Identity, tree_wire_bits
 from repro.data.lm import SyntheticLM, lm_batches_for_dfl
+from repro.launch.steps import kernelize_compressor
 from repro.models import train_loss, init_params
 from repro.optim import sgd, momentum_sgd, adamw
 from repro.planner import AdaptiveController, Budget, unit_cost_model
@@ -97,7 +98,10 @@ def main(argv=None) -> None:
     ap.add_argument("--engine", default="auto",
                     choices=["auto", "dense", "sparse"])
     ap.add_argument("--use-kernels", action="store_true",
-                    help="Pallas kernels on the sparse hot path")
+                    help="Pallas kernels: sparse-engine gossip + fused "
+                         "CHOCO compress-and-move, and the kernel-backed "
+                         "TopK compressor on either engine (dispatch per "
+                         "repro.kernels.registry; interpret mode off-TPU)")
     ap.add_argument("--optimizer", default="sgd",
                     choices=["sgd", "momentum", "adamw"])
     ap.add_argument("--lr", type=float, default=3e-2)
@@ -134,7 +138,9 @@ def main(argv=None) -> None:
     arch = get_arch(args.arch)
     cfg = arch.reduced
     n = args.nodes
-    comp = make_compressor(args.compression) if args.compression else None
+    comp = kernelize_compressor(
+        make_compressor(args.compression) if args.compression else None,
+        args.use_kernels)
     topology = make_topology(args.topology, n)
     opt = make_optimizer(args.optimizer, args.lr)
 

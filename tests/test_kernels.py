@@ -92,3 +92,275 @@ def test_qsgd_kernel_agrees_with_library_compressor():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
     comp = QSGD(levels=16)
     assert abs(comp.delta(n) - 1.0 / (1.0 + min(n / 256.0, n**0.5 / 16.0))) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# TopK kernel (two-pass candidate select + mask)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_topk_bitwise_matches_ref(shape, dtype):
+    x = jax.random.normal(
+        jax.random.key(hash(shape) % 2**31), shape).astype(dtype)
+    for k in {1, max(1, int(np.prod(shape)) // 3), int(np.prod(shape))}:
+        got = ops.top_k_compress(x, k, interpret=True)
+        want = ref.top_k_ref(x, k)
+        assert jnp.array_equal(got, want), (shape, dtype, k)
+
+
+def test_topk_matches_library_compressor_bitwise():
+    """TopK(use_kernels=True) is the SAME operator as the reference
+    TopK — flipping the flag can never change a trajectory."""
+    from repro.core.compression import TopK
+
+    for shape in [(1000,), (300, 70), (32769,)]:
+        x = jax.random.normal(jax.random.key(3), shape)
+        for frac in (0.01, 0.25, 1.0):
+            want = TopK(frac=frac)(x, None)
+            got = TopK(frac=frac, use_kernels=True)(x, None)
+            assert jnp.array_equal(got, want), (shape, frac)
+
+
+def test_topk_tie_handling():
+    """Ties AT the threshold are kept inclusively, exactly like the
+    reference (which may keep more than k coordinates)."""
+    x = jnp.asarray([2.0, -2.0, 2.0, 0.5, -0.25, 2.0, 0.0, -2.0, 1.0])
+    for k in range(1, x.size + 1):
+        got = ops.top_k_compress(x, k, interpret=True)
+        want = ref.top_k_ref(x, k)
+        assert jnp.array_equal(got, want), k
+    # all-tied vector: any k keeps everything
+    t = jnp.full((300,), -1.5)
+    assert jnp.array_equal(ops.top_k_compress(t, 7, interpret=True), t)
+
+
+def test_topk_k_equals_d_is_identity():
+    x = jax.random.normal(jax.random.key(5), (257,))
+    assert jnp.array_equal(ops.top_k_compress(x, 257, interpret=True), x)
+
+
+def test_topk_zero_vector_and_threshold_zero():
+    z = jnp.zeros((100,))
+    assert jnp.array_equal(ops.top_k_compress(z, 10, interpret=True), z)
+    # true threshold 0: zeros padding can't perturb the selection
+    x = jnp.concatenate([jnp.asarray([3.0, -2.0]), jnp.zeros((98,))])
+    got = ops.top_k_compress(x, 50, interpret=True)
+    assert jnp.array_equal(got, ref.top_k_ref(x, 50))
+
+
+def test_topk_out_of_range_k_raises():
+    x = jnp.ones((8,))
+    with pytest.raises(ValueError, match="out of range"):
+        ops.top_k_compress(x, 9, interpret=True)
+    with pytest.raises(ValueError, match="out of range"):
+        ops.top_k_compress(x, 0, interpret=True)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 5000), st.integers(0, 2**31 - 1))
+def test_topk_property_random_sizes(n, seed):
+    """Non-tile-multiple sizes (padding path) stay bitwise vs ref."""
+    key = jax.random.key(seed)
+    x = jax.random.normal(key, (n,))
+    k = 1 + seed % n
+    got = ops.top_k_compress(x, k, interpret=True)
+    want = ref.top_k_ref(x, k)
+    assert jnp.array_equal(got, want), (n, k)
+
+
+# ---------------------------------------------------------------------------
+# Fused CHOCO compress-and-move
+# ---------------------------------------------------------------------------
+
+
+def _fused_inputs(shape, dtype, seed=5):
+    key = jax.random.key(seed)
+    x, y, my = (jax.random.normal(jax.random.fold_in(key, i),
+                                  shape).astype(dtype) for i in range(3))
+    noise = jax.random.uniform(jax.random.fold_in(key, 9), shape)
+    return x, y, my, noise
+
+
+@pytest.mark.parametrize("shape", [(64,), (1000,), (3, 5, 7), (32769,)])
+def test_choco_qsgd_fused_equals_unfused_f32(shape):
+    """The fused kernel reproduces the unfused
+    choco_move -> qsgd_quantize -> add chain: x_new bitwise, y_new to
+    one f32 ulp (the final sign*norm*lvl/(s*c) multiply chain rounds
+    differently across separately-compiled kernels on XLA:CPU — the
+    quantization LEVEL picked is identical, only the last bit of the
+    reconstruction can differ)."""
+    x, y, my, noise = _fused_inputs(shape, jnp.float32)
+
+    @jax.jit
+    def fused(x, y, my, noise):
+        return ops.choco_qsgd_move(x, y, my, 0.5, noise, levels=16,
+                                   interpret=True)
+
+    @jax.jit
+    def unfused(x, y, my, noise):
+        x_new, d = ops.choco_move(x, y, my, 0.5, interpret=True)
+        q = ops.qsgd_quantize(d, noise, levels=16, interpret=True)
+        return x_new, y + q
+
+    xf, yf = fused(x, y, my, noise)
+    xu, yu = unfused(x, y, my, noise)
+    assert jnp.array_equal(xf, xu)
+    np.testing.assert_allclose(np.asarray(yf), np.asarray(yu), rtol=3e-7,
+                               atol=3e-7)
+
+
+@pytest.mark.parametrize("shape", [(64,), (1000,), (3, 5, 7), (32769,)])
+def test_choco_topk_fused_equals_unfused_f32(shape):
+    """Bitwise: the fused TopK kernel masks the SAME materialized diff
+    tensor its threshold was selected from, so the kept set cannot drift
+    (see choco_fused.choco_topk_2d)."""
+    x, y, my, _ = _fused_inputs(shape, jnp.float32)
+    k = max(1, int(np.prod(shape)) // 4)
+
+    @jax.jit
+    def fused(x, y, my):
+        return ops.choco_topk_move(x, y, my, 0.5, k, interpret=True)
+
+    @jax.jit
+    def unfused(x, y, my):
+        x_new, d = ops.choco_move(x, y, my, 0.5, interpret=True)
+        return x_new, y + ops.top_k_compress(d, k, interpret=True)
+
+    xf, yf = fused(x, y, my)
+    xu, yu = unfused(x, y, my)
+    assert jnp.array_equal(xf, xu)
+    assert jnp.array_equal(yf, yu)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_choco_fused_matches_oracle(dtype):
+    shape = (300, 70)
+    x, y, my, noise = _fused_inputs(shape, dtype)
+    d = int(np.prod(shape))
+    s = 16.0
+    c = 1.0 + min(d / (s * s), d**0.5 / s)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-2
+    got = ops.choco_qsgd_move(x, y, my, 0.5, noise, levels=16,
+                              interpret=True)
+    want = ref.choco_qsgd_ref(x, y, my, 0.5, noise, levels=16, c=c)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32), rtol=tol,
+                                   atol=tol)
+    got = ops.choco_topk_move(x, y, my, 0.5, d // 4, interpret=True)
+    want = ref.choco_topk_ref(x, y, my, 0.5, d // 4)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32), rtol=tol,
+                                   atol=tol)
+
+
+def test_fused_choco_fewer_buffer_passes():
+    """The reason the fused kernel exists: fewer pad round-trips AND
+    fewer kernel launches than the unfused composition (counted on the
+    un-jitted wrapper bodies, where the counters tick per call)."""
+    x, y, my, noise = _fused_inputs((3, 5, 7), jnp.float32)
+
+    ops.reset_op_stats()
+    ops.eager_impl("choco_qsgd_move")(x, y, my, 0.5, noise, levels=16,
+                                      interpret=True)
+    fused = ops.op_stats()
+    ops.reset_op_stats()
+    _, d = ops.eager_impl("choco_move")(x, y, my, 0.5, interpret=True)
+    ops.eager_impl("qsgd_quantize")(d, noise, levels=16, interpret=True)
+    unfused = ops.op_stats()
+    assert fused["pallas_calls"] < unfused["pallas_calls"], (fused, unfused)
+    assert fused["pad_roundtrips"] < unfused["pad_roundtrips"], (fused,
+                                                                 unfused)
+
+    ops.reset_op_stats()
+    ops.eager_impl("choco_topk_move")(x, y, my, 0.5, k=26,
+                                      tmode="interpret", interpret=True)
+    fused = ops.op_stats()
+    ops.reset_op_stats()
+    _, d = ops.eager_impl("choco_move")(x, y, my, 0.5, interpret=True)
+    ops.eager_impl("top_k_compress")(d, k=26, tmode="interpret", imask=True)
+    unfused = ops.op_stats()
+    assert fused["pallas_calls"] < unfused["pallas_calls"], (fused, unfused)
+    assert fused["pad_roundtrips"] < unfused["pad_roundtrips"], (fused,
+                                                                 unfused)
+    ops.reset_op_stats()
+
+
+# ---------------------------------------------------------------------------
+# Registry: lazy backend detection + per-op dispatch guards
+# ---------------------------------------------------------------------------
+
+
+def test_backend_detection_is_lazy(monkeypatch):
+    """The ISSUE-5 fix: backend choice is read at CALL time, so a backend
+    that initializes after `import repro.kernels` still gets Mosaic
+    dispatch (the old ops.ON_TPU import-time constant pinned interpret
+    mode forever)."""
+    from repro.kernels import registry
+
+    try:
+        registry.reset_backend_cache()
+        monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+        assert registry.on_tpu()
+        assert registry.resolve_mode("qsgd_quantize", None) == "mosaic"
+        assert registry.resolve_mode("choco_qsgd", None) == "mosaic"
+        # ops Mosaic can't lower fall back to plain XLA on TPU
+        assert registry.resolve_mode("topk_partials", None) == "fallback"
+        # the cache holds until reset
+        monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+        assert registry.on_tpu()
+        registry.reset_backend_cache()
+        assert not registry.on_tpu()
+        assert registry.resolve_mode("qsgd_quantize", None) == "interpret"
+        # explicit interpret always wins
+        assert registry.resolve_mode("qsgd_quantize", True) == "interpret"
+        assert registry.resolve_mode("topk_partials", False) == "mosaic"
+    finally:
+        registry.reset_backend_cache()
+
+
+def test_topk_tpu_fallback_mode_is_bitwise():
+    """The plain-XLA threshold fallback (what a TPU host runs for the
+    candidate pass) produces the same compressed output bit-for-bit."""
+    from repro.kernels.ops import _top_k_compress
+
+    x = jax.random.normal(jax.random.key(2), (5000,))
+    a = _top_k_compress(x, k=500, tmode="fallback", imask=True)
+    b = _top_k_compress(x, k=500, tmode="interpret", imask=True)
+    assert jnp.array_equal(a, b)
+    assert jnp.array_equal(a, ref.top_k_ref(x, 500))
+
+
+def test_on_tpu_constant_is_deprecated():
+    from repro.kernels import ops as ops_mod
+
+    with pytest.warns(DeprecationWarning, match="lazy"):
+        val = ops_mod.ON_TPU
+    assert isinstance(val, bool)
+
+
+def test_registry_lists_all_ops_with_oracles():
+    from repro.kernels import registry
+
+    names = {op.name for op in registry.list_ops()}
+    assert {"qsgd_quantize", "gossip_mix", "choco_move", "topk_partials",
+            "topk_mask", "choco_qsgd", "choco_topk"} <= names
+    with pytest.raises(ValueError, match="unknown kernel op"):
+        registry.get_op("nope")
+
+
+def test_parity_suite_all_ok():
+    """The reference-parity harness (what bench_kernels asserts in CI):
+    every registered op agrees with its oracle; bitwise ops EXACTLY."""
+    from repro.kernels import registry
+
+    records = registry.parity_suite(shapes=[(64,), (1000,), (300, 70)],
+                                    dtypes=[jnp.float32, jnp.bfloat16])
+    bad = [r for r in records if not r["ok"]]
+    assert not bad, bad
+    topk_recs = [r for r in records if r["op"] in ("topk_partials",
+                                                   "topk_mask")]
+    assert topk_recs and all(r["max_err"] == 0.0 for r in topk_recs)

@@ -128,6 +128,24 @@ out4, _ = jax.jit(make_round_fn(cfg3, det_loss2, opt, engine="sparse",
 err5 = float(jnp.max(jnp.abs(ref3.params["w"] - out4.params["w"])))
 assert err5 < 1e-5, f"kernel hot path mismatch: {err5}"
 print("KERNELS_OK", err5)
+
+# TopK C-DFL: dense reference vs the sparse engine's FUSED
+# compress-and-move kernel (choco_topk_move) — the kernel-backed TopK is
+# bitwise vs the library compressor, so engine parity matches the
+# uncompressed case.
+cfg4 = DFLConfig(tau1=2, tau2=2, topology=topo,
+                 compression=make_compressor("top_k", frac=0.3), gamma=0.5)
+st0d = init_state({"w": jnp.zeros((33,))}, N, opt, jax.random.key(11),
+                  compressed=True)
+ref4, _ = jax.jit(make_round_fn(cfg4, det_loss2, opt))(st0d, det_batches)
+out5, _ = jax.jit(make_round_fn(cfg4, det_loss2, opt, engine="sparse",
+                                mesh=mesh, node_axes=("data",),
+                                use_kernels=True))(st0d, det_batches)
+err6 = max(float(jnp.max(jnp.abs(ref4.params["w"] - out5.params["w"]))),
+           float(jnp.max(jnp.abs(ref4.hat_params["w"] -
+                                 out5.hat_params["w"]))))
+assert err6 < 1e-5, f"fused TopK kernel engine mismatch: {err6}"
+print("TOPK_KERNELS_OK", err6)
 """
 
 
@@ -144,3 +162,4 @@ def test_multidevice_semantics():
     assert "RNG_PARITY_OK" in out.stdout
     assert "CDFL_PARITY_OK" in out.stdout
     assert "KERNELS_OK" in out.stdout
+    assert "TOPK_KERNELS_OK" in out.stdout
