@@ -1,0 +1,42 @@
+"""Invariant auditor: compat-boundary lint + compiled-artifact audits.
+
+The repo's correctness rests on contracts that are easy to re-break by
+accident (each already regressed once — see docs/ARCHITECTURE.md
+"Invariants & enforcement"):
+
+  * JAX version drift lives ONLY in ``core/substrate.py``;
+  * backend probes never run at import time (the ``ops.ON_TPU`` class);
+  * (tau1, tau2) are device data in round code — a host ``int()`` is a
+    silent recompile or sync point;
+  * round-reachable code derives PRNG keys by ``fold_in``, never by raw
+    construction (dense<->sparse bitwise parity depends on it);
+  * the superstep carry is donated, its executable has no baked tau
+    constants, and the sparse engine's collective-permutes match
+    ``Topology.shifts()``.
+
+Two layers machine-check these on every PR:
+
+  * ``repro.analysis.lint``  — AST lint over ``src/repro`` with named,
+    individually-suppressible rules (``repro.analysis.rules``); inline
+    pragmas REQUIRE a reason: ``# repro-lint: disable=<rule> (<why>)``.
+  * ``repro.analysis.audits`` — compiled-artifact audits reading the
+    lowered/optimized HLO of the production superstep: donation
+    (input-output aliasing of every DFLState leaf), recompile hazard
+    (identical fingerprints across schedule values), and collective
+    matching (ppermute source-target pairs == ``Topology.shifts()``).
+
+Run ``python -m repro.analysis lint`` / ``... audit`` (tier-1 CI), or
+let pytest collect the same checks via ``tests/test_analysis_*.py``.
+"""
+from repro.analysis.lint import (LintReport, Violation, lint_paths,
+                                 lint_tree, load_baseline)
+from repro.analysis.rules import RULES
+
+__all__ = [
+    "RULES",
+    "LintReport",
+    "Violation",
+    "lint_paths",
+    "lint_tree",
+    "load_baseline",
+]

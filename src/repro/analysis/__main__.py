@@ -1,0 +1,99 @@
+"""``python -m repro.analysis`` — the invariant auditor CLI.
+
+Subcommands:
+
+* ``lint``  — AST lint over ``src/repro`` (no jax import, runs anywhere):
+  exit 1 on violations not covered by a pragma or the shipped baseline.
+* ``audit`` — compiled-artifact audits (donation / recompile /
+  collective-matching) on the production sparse superstep; forces 8 host
+  devices via XLA_FLAGS **before** importing jax, so it works on any
+  single-CPU CI box. Exit 1 on any failed audit.
+
+Both accept ``--json OUT`` to write a machine-readable report (the CI
+``tier1-analysis`` job uploads it as an artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _cmd_lint(args) -> int:
+    # deliberately jax-free: the lint must run on boxes (and canary jax
+    # versions) where the library itself may not even import.
+    from repro.analysis.lint import (default_baseline_path, lint_tree,
+                                     load_baseline)
+
+    baseline_path = args.baseline or str(default_baseline_path())
+    report = lint_tree(baseline=load_baseline(baseline_path))
+    for v in report.new:
+        print(v.render())
+    for v in report.baselined:
+        print(f"[baselined] {v.render()}")
+    print(f"repro-lint: files: {report.files_scanned}  "
+          f"new: {len(report.new)}  baselined: {len(report.baselined)}  "
+          f"suppressed: {len(report.suppressed)}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report.to_dict(), f, indent=2)
+        print(f"report written to {args.json}")
+    # --error-on-new is the (default) contract made explicit for CI logs;
+    # --no-error-on-new exists for local exploration only.
+    return 1 if (report.new and args.error_on_new) else 0
+
+
+def _cmd_audit(args) -> int:
+    import os
+
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count="
+            f"{args.devices}").strip()
+    # import AFTER the flag: jax snapshots XLA_FLAGS at first import.
+    from repro.analysis.audits import run_production_audits
+
+    results = run_production_audits(num_nodes=args.devices)
+    for r in results:
+        print(f"[{'PASS' if r.ok else 'FAIL'}] {r.name}: {r.detail}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([r.to_dict() for r in results], f, indent=2)
+        print(f"report written to {args.json}")
+    return 0 if all(r.ok for r in results) else 1
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="invariant auditor: source lint + compiled-artifact "
+                    "audits")
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    pl = sub.add_parser("lint", help="AST lint over src/repro")
+    pl.add_argument("--baseline", default=None,
+                    help="baseline JSON (default: shipped lint_baseline.json)")
+    pl.add_argument("--json", default=None, metavar="OUT",
+                    help="write JSON report to OUT")
+    pl.add_argument("--error-on-new", dest="error_on_new",
+                    action="store_true", default=True,
+                    help="exit 1 on new violations (default)")
+    pl.add_argument("--no-error-on-new", dest="error_on_new",
+                    action="store_false")
+    pl.set_defaults(fn=_cmd_lint)
+
+    pa = sub.add_parser("audit",
+                        help="compiled-artifact audits (needs jax)")
+    pa.add_argument("--devices", type=int, default=8,
+                    help="forced host device count / ring size (default 8)")
+    pa.add_argument("--json", default=None, metavar="OUT",
+                    help="write JSON report to OUT")
+    pa.set_defaults(fn=_cmd_audit)
+
+    args = p.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

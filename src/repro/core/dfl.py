@@ -43,11 +43,11 @@ from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import mixing as mixing_lib
 from repro.core.compression import Compressor
-from repro.core.substrate import DenseSubstrate, NodeSubstrate
+from repro.core.substrate import (DenseSubstrate, NodeSubstrate,
+                                  mesh_axis_size)
 from repro.core.topology import Topology
 
 PyTree = Any
@@ -453,7 +453,7 @@ def sparse_engine_eligible(cfg: DFLConfig, mesh,
     if n <= 1:
         return False
     try:
-        mesh_n = int(np.prod([mesh.shape[a] for a in node_axes]))
+        mesh_n = mesh_axis_size(mesh, tuple(node_axes))
     except KeyError:
         return False
     if mesh_n != n:

@@ -174,6 +174,30 @@ class RoundExecutor:
         recompile-free property)."""
         return self._trace_count
 
+    # -- audit hook --------------------------------------------------------
+
+    def lower_superstep(self, state: DFLState, batches: PyTree, taus):
+        """Lower (without compiling) the dynamic superstep at example
+        arguments — the compiled-artifact audit hook
+        (``repro.analysis.audits``): donation is read off the compiled
+        module's ``input_output_alias`` header, recompile hazards by
+        fingerprinting lowerings at different trajectory values,
+        collective matching off the optimized HLO's permute pairs.
+        Audit lowerings do not touch ``compile_count`` (the
+        zero-recompile assertions only count *dispatch* traces).
+        Dynamic mode only — the static fallback intentionally keys
+        compiles on (tau1, tau2)."""
+        if not self.dynamic:
+            raise ValueError(
+                "lower_superstep needs dynamic=True: the static fallback "
+                "bakes (tau1, tau2) per compile by design")
+        n = self._trace_count
+        try:
+            return self._dynamic_fn.lower(
+                state, batches, jnp.asarray(taus, jnp.int32))
+        finally:
+            self._trace_count = n
+
     # -- dispatch ----------------------------------------------------------
 
     def _check_taus(self, tau1: int, tau2: int) -> Tuple[int, int]:

@@ -72,6 +72,7 @@ def mix_dense_power(params: PyTree, topology: Topology, tau2: int) -> PyTree:
     interleaved). Saves (tau2-1) rounds of collectives: a legitimate
     beyond-paper optimization for plain DFL, recorded in §Perf.
     """
+    # repro-lint: disable=no-host-coercion-of-device-scalars (tau2 is a static trace-time int here: dense_power bakes C^tau2 in, and make_round_fn rejects dynamic_taus for it)
     cpow = np.linalg.matrix_power(topology.mixing, int(tau2))
     topo_pow = Topology(
         name=f"{topology.name}^%d" % tau2,

@@ -76,8 +76,6 @@ def make_sharded_round_fn(
     """
     from jax.sharding import PartitionSpec as P
 
-    import numpy as np
-
     topo = cfg.topology
     if constrain is not None:
         unconstrained = [a for a in mesh.axis_names
@@ -94,7 +92,7 @@ def make_sharded_round_fn(
     assert topo.is_shift_structured(), (
         f"{topo.name} is not circulant; use the dense engine "
         "(core.dfl.make_round_fn) for arbitrary topologies")
-    mesh_n = int(np.prod([mesh.shape[a] for a in node_axes]))
+    mesh_n = substrate_lib.mesh_axis_size(mesh, tuple(node_axes))
     assert mesh_n == topo.num_nodes, (
         f"node mesh axes {tuple(node_axes)} enumerate {mesh_n} devices but "
         f"{topo.name} has {topo.num_nodes} nodes — the size-1-per-node "

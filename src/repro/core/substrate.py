@@ -44,6 +44,7 @@ AxisName = Union[str, Tuple[str, ...]]
 
 __all__ = [
     "axis_size",
+    "mesh_axis_size",
     "shard_map",
     "supports_partial_auto",
     "NodeSubstrate",
@@ -66,6 +67,24 @@ def axis_size(axis_name: AxisName) -> int:
         return int(jax.lax.axis_size(axis_name))
     # psum of a concrete scalar is evaluated statically: the axis size.
     return int(jax.lax.psum(1, axis_name))
+
+
+def mesh_axis_size(mesh, axes: Optional[AxisName] = None) -> int:
+    """Device count of ``axes`` on ``mesh`` (all axes when None) — THE one
+    spelling of "how many nodes do these mesh axes enumerate". Works on
+    ``jax.sharding.Mesh`` and ``AbstractMesh`` alike (both expose
+    ``.shape``); an unknown axis raises ``KeyError``. Callers outside
+    ``shard_map`` must use this, not ``axis_size`` (which needs a bound
+    axis context) and not ad-hoc ``np.prod(mesh.shape[...])`` spellings
+    (which drifted into four copies once)."""
+    if axes is None:
+        axes = tuple(mesh.axis_names)
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= int(mesh.shape[a])
+    return n
 
 
 def shard_map(

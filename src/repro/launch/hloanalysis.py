@@ -31,7 +31,14 @@ from __future__ import annotations
 import dataclasses
 import json
 import re
-from typing import Dict, List, Optional, Tuple
+import warnings
+from typing import Dict, FrozenSet, List, Optional, Tuple
+
+
+class HloParseWarning(UserWarning):
+    """The HLO text had a construct the accounting model can only
+    approximate (e.g. a while loop without ``known_trip_count``) — the
+    result is a lower bound there, never a silent drop."""
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -262,6 +269,11 @@ class HloAnalyzer:
             trip = int(mt.group(1)) if mt else 1
             if not mt:
                 c.unknown_trip_loops += 1
+                warnings.warn(
+                    f"while loop {ins.name!r} has no known_trip_count "
+                    "annotation; its body is counted ONCE (cost is a lower "
+                    "bound — check unknown_trip_loops in the result)",
+                    HloParseWarning, stacklevel=2)
             if mb:
                 c += self.computation_cost(mb.group(1)).scaled(trip)
             return c
@@ -314,6 +326,81 @@ class HloAnalyzer:
         if self.entry is None:
             return Cost()
         return self.computation_cost(self.entry)
+
+
+_ST_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\}[, ]*)*)\}")
+_PAIR_RE = re.compile(r"\{(\d+),(\d+)\}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveSite:
+    """One collective instruction, located: where it sits (computation,
+    fusion nesting), how often it runs (product of enclosing loop trips),
+    and — for collective-permute — its (source, target) pairs."""
+
+    opcode: str                                   # canonical (no -start)
+    name: str                                     # instruction name
+    computation: str                              # enclosing computation
+    pairs: Optional[Tuple[Tuple[int, int], ...]]  # permutes only
+    trip_product: int                             # enclosing loop trips
+    in_fusion: bool
+    known_trips: bool   # False if ANY enclosing loop lacked a trip count
+
+
+def collective_sites(hlo_text: str, warn: bool = True
+                     ) -> List[CollectiveSite]:
+    """Every collective in the module, walked through while bodies,
+    fusions and called computations — the auditor's parsing entry point
+    (``repro.analysis.audits`` matches permute pairs against
+    ``Topology.shifts()``).
+
+    Collectives nested in fusion bodies are reported (flagged
+    ``in_fusion``), and a while loop missing ``known_trip_count`` warns
+    (``HloParseWarning``) and counts its body ONCE with
+    ``known_trips=False`` — never a silent drop either way. Async
+    ``-done`` halves are skipped (their ``-start`` is the site).
+    """
+    comps, entry = parse_module(hlo_text)
+    sites: List[CollectiveSite] = []
+
+    def visit(name: str, trip: int, in_fusion: bool, known: bool,
+              stack: FrozenSet[str]):
+        comp = comps.get(name)
+        if comp is None or name in stack:
+            return
+        stack = stack | {name}
+        for ins in comp.instructions:
+            op = ins.opcode
+            if op == "while":
+                mb = _BODY_RE.search(ins.line)
+                mt = _TRIP_RE.search(ins.line)
+                t = int(mt.group(1)) if mt else 1
+                if not mt and warn:
+                    warnings.warn(
+                        f"while loop {ins.name!r} has no known_trip_count; "
+                        "collectives in its body are counted once "
+                        "(known_trips=False)", HloParseWarning, stacklevel=2)
+                if mb:
+                    visit(mb.group(1), trip * t, in_fusion,
+                          known and bool(mt), stack)
+                continue
+            clean = op.replace("-start", "").replace("-done", "")
+            if clean in _COLLECTIVES and not op.endswith("-done"):
+                m = _ST_PAIRS_RE.search(ins.line)
+                pairs = (tuple((int(a), int(b))
+                               for a, b in _PAIR_RE.findall(m.group(1)))
+                         if m else None)
+                sites.append(CollectiveSite(
+                    opcode=clean, name=ins.name, computation=name,
+                    pairs=pairs, trip_product=trip, in_fusion=in_fusion,
+                    known_trips=known))
+            for mc in _CALLS_RE.finditer(ins.line):
+                visit(mc.group(1), trip, in_fusion or op == "fusion",
+                      known, stack)
+
+    if entry is not None:
+        visit(entry, 1, False, True, frozenset())
+    return sites
 
 
 def analyze_text(hlo_text: str) -> Dict:

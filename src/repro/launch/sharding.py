@@ -17,8 +17,9 @@ from __future__ import annotations
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.substrate import mesh_axis_size
 
 PyTree = Any
 
@@ -61,20 +62,16 @@ def node_axes_for(mode: str, mesh: Mesh) -> Tuple[str, ...]:
 
 def num_nodes_for(mode: str, mesh: Mesh, fsdp_nodes: int) -> int:
     axes = node_axes_for(mode, mesh)
-    if mode == "gossip-dp":
-        return int(np.prod([mesh.shape[a] for a in axes]))
-    # gossip-fsdp: pod-count nodes on multi-pod, fsdp_nodes replicated else.
-    if axes:
-        return int(np.prod([mesh.shape[a] for a in axes]))
+    if mode == "gossip-dp" or axes:
+        return mesh_axis_size(mesh, axes)
+    # gossip-fsdp on a single pod: fsdp_nodes replicated nodes.
     return fsdp_nodes
 
 
 def _axis_size(mesh: Mesh, axis) -> int:
     if axis is None:
         return 1
-    if isinstance(axis, tuple):
-        return int(np.prod([mesh.shape[a] for a in axis]))
-    return mesh.shape[axis]
+    return mesh_axis_size(mesh, axis)
 
 
 def spec_for_param(

@@ -25,6 +25,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig, InputShape, SHAPES
 from repro.core import dfl as dfl_lib
 from repro.core import mixing as mixing_lib
+from repro.core import substrate as substrate_lib
 from repro.core import topology as topo_lib
 from repro.core.compression import Compressor
 from repro.launch import sharding as shard_lib
@@ -607,7 +608,7 @@ def _serve_param_shardings(arch: ArchConfig, cfg: ModelConfig, mesh: Mesh):
 
 def _batch_entry(mesh: Mesh, batch: int):
     axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
-    size = int(np.prod([mesh.shape[a] for a in axes]))
+    size = substrate_lib.mesh_axis_size(mesh, axes)
     if batch % size == 0:
         return axes if len(axes) > 1 else axes[0]
     if batch % mesh.shape["data"] == 0:

@@ -1,0 +1,218 @@
+"""Compiled-artifact audits (repro.analysis.audits).
+
+Each audit must (a) pass on a correct artifact and (b) FAIL when seeded
+with its deliberate violation — an un-donated carry, a baked tau
+constant, a wrong permute pair — otherwise the audit is decoration:
+
+* donation: jit WITHOUT donate_argnums vs WITH, on a real carry-shaped
+  function (donation aliasing works on single-device CPU).
+* recompile: static_argnums bakes the tau into the executable (texts
+  differ) vs a traced tau (byte-identical lowerings).
+* collective-matching: synthetic optimized HLO with correct vs
+  wrong-shift ``source_target_pairs`` against ring(8).
+
+The production artifact itself (8-node sparse superstep via
+``RoundExecutor.lower_superstep``) runs in a subprocess with 8 forced
+host devices through the real CLI: ``python -m repro.analysis audit``.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.audits import (
+    AuditResult, audit_collective_matching, audit_donation, audit_recompile,
+    expected_shift_pairs, hlo_fingerprint, parse_input_output_aliases)
+from repro.core.topology import fully_connected, ring
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# parsing helpers
+# ---------------------------------------------------------------------------
+
+
+def test_parse_input_output_aliases_synthetic_header():
+    text = ("HloModule jit_step, input_output_alias={ {0}: (0, {}, "
+            "may-alias), {1}: (2, {}, must-alias) }, "
+            "entry_computation_layout={...}\n")
+    assert parse_input_output_aliases(text) == {(0,): 0, (1,): 2}
+
+
+def test_parse_input_output_aliases_absent_means_empty():
+    assert parse_input_output_aliases("HloModule jit_step\nROOT x = ...") == {}
+
+
+def test_expected_shift_pairs_ring8():
+    pairs = expected_shift_pairs(ring(8))
+    assert set(pairs) == {1, 7}
+    assert pairs[1] == frozenset((s, (s + 1) % 8) for s in range(8))
+    assert pairs[7] == frozenset((s, (s + 7) % 8) for s in range(8))
+
+
+# ---------------------------------------------------------------------------
+# donation audit: deliberate violation = drop donate_argnums
+# ---------------------------------------------------------------------------
+
+
+def _carry_fn(state):
+    return jax.tree_util.tree_map(lambda x: x * 2.0, state)
+
+
+def _carry():
+    return {"params": jnp.ones((64,)), "opt": jnp.zeros((64,))}
+
+
+def test_audit_donation_passes_with_donate_argnums():
+    text = jax.jit(_carry_fn, donate_argnums=(0,)).lower(
+        _carry()).compile().as_text()
+    res = audit_donation(text, ["params", "opt"])
+    assert res.ok, res.detail
+
+
+def test_audit_donation_fails_without_donate_argnums():
+    text = jax.jit(_carry_fn).lower(_carry()).compile().as_text()
+    res = audit_donation(text, ["params", "opt"])
+    assert not res.ok
+    assert "params" in res.detail and "donate_argnums" in res.detail
+
+
+def test_audit_donation_catches_partial_donation():
+    # donating only arg 0 of (state_leaf0, state_leaf1) as separate args:
+    # leaf 1 must be reported missing.
+    def f(a, b):
+        return a * 2, b * 2
+
+    text = jax.jit(f, donate_argnums=(0,)).lower(
+        jnp.ones((8,)), jnp.ones((8,))).compile().as_text()
+    res = audit_donation(text, ["a", "b"])
+    assert not res.ok and "param 1 (b)" in str(res.data["missing"])
+
+
+# ---------------------------------------------------------------------------
+# recompile audit: deliberate violation = static_argnums-baked tau
+# ---------------------------------------------------------------------------
+
+
+def _loop(x, tau):
+    return jax.lax.fori_loop(0, tau, lambda _, v: v * 1.5, x)
+
+
+def test_audit_recompile_passes_for_traced_taus():
+    fn = jax.jit(_loop)
+    x = jnp.ones((16,))
+    texts = [fn.lower(x, jnp.int32(t)).as_text() for t in (1, 3)]
+    res = audit_recompile(texts, labels=["tau=1", "tau=3"])
+    assert res.ok, res.detail
+    assert len(set(res.data["fingerprints"].values())) == 1
+
+
+def test_audit_recompile_fails_for_baked_tau():
+    fn = jax.jit(_loop, static_argnums=(1,))
+    x = jnp.ones((16,))
+    texts = [fn.lower(x, t).as_text() for t in (1, 3)]
+    res = audit_recompile(texts, labels=["tau=1", "tau=3"])
+    assert not res.ok
+    assert "baked" in res.detail
+
+
+def test_hlo_fingerprint_is_content_hash():
+    assert hlo_fingerprint("abc") == hlo_fingerprint("abc")
+    assert hlo_fingerprint("abc") != hlo_fingerprint("abd")
+
+
+# ---------------------------------------------------------------------------
+# collective-matching audit: deliberate violation = wrong shift pairs
+# ---------------------------------------------------------------------------
+
+
+def _permute_hlo(pair_strs):
+    perms = "\n".join(
+        f"  %p{i} = f32[8]{{0}} collective-permute(%x), "
+        f"source_target_pairs={{{pairs}}}"
+        for i, pairs in enumerate(pair_strs))
+    return (
+        "HloModule jit_round\n\n"
+        "ENTRY %main (x: f32[8]) -> f32[8] {\n"
+        "  %x = f32[8]{0} parameter(0)\n"
+        f"{perms}\n"
+        "  ROOT %out = f32[8]{0} add(%p0, %p0)\n"
+        "}\n")
+
+
+def _pairs_str(shift, n=8):
+    return ",".join(f"{{{s},{(s + shift) % n}}}" for s in range(n))
+
+
+def test_audit_collective_matching_passes_on_ring8_pairs():
+    text = _permute_hlo([_pairs_str(1), _pairs_str(7)])
+    res = audit_collective_matching(text, ring(8))
+    assert res.ok, res.detail
+    assert res.data["num_permutes"] == 2
+
+
+def test_audit_collective_matching_fails_on_wrong_shift():
+    # shift 2 instead of 7: one expected set missing, one unexpected.
+    text = _permute_hlo([_pairs_str(1), _pairs_str(2)])
+    res = audit_collective_matching(text, ring(8))
+    assert not res.ok
+    assert "missing" in res.detail
+
+
+def test_audit_collective_matching_fails_on_dropped_shift():
+    text = _permute_hlo([_pairs_str(1)])
+    res = audit_collective_matching(text, ring(8))
+    assert not res.ok
+
+
+def test_audit_collective_matching_requires_permutes_when_shifted():
+    text = ("HloModule jit_round\n\n"
+            "ENTRY %main (x: f32[8]) -> f32[8] {\n"
+            "  ROOT %x = f32[8]{0} parameter(0)\n}\n")
+    res = audit_collective_matching(text, ring(8))
+    assert not res.ok
+
+
+def test_audit_collective_matching_fully_connected_single_shift_set():
+    # fully_connected(4) has shifts 1,2,3 — all three pair sets required.
+    topo = fully_connected(4)
+    strs = [_pairs_str(s, 4) for s, _ in topo.shifts()]
+    good = audit_collective_matching(
+        _permute_hlo(strs).replace("f32[8]", "f32[4]"), topo)
+    assert good.ok, good.detail
+
+
+def test_audit_result_to_dict_roundtrips():
+    r = AuditResult("x", True, "fine", {"k": 1})
+    assert r.to_dict() == {"name": "x", "ok": True, "detail": "fine",
+                           "data": {"k": 1}}
+
+
+# ---------------------------------------------------------------------------
+# the production artifact, through the real CLI (8 fake devices)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_production_audits_pass_via_cli(tmp_path):
+    out_json = tmp_path / "audit.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)   # the CLI must inject the device flag itself
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "audit",
+         "--json", str(out_json)],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr[-3000:]
+    results = json.loads(out_json.read_text())
+    assert {r["name"] for r in results} == {
+        "donation", "recompile", "collective-matching"}
+    assert all(r["ok"] for r in results), results
+    donation = next(r for r in results if r["name"] == "donation")
+    # the whole DFLState carry: params, opt_state, rng, round_idx.
+    assert donation["data"]["expected_params"] == 4

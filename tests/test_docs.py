@@ -41,3 +41,19 @@ def test_readme_links_docs_pages():
     text = open(os.path.join(ROOT, "README.md")).read()
     assert "docs/ARCHITECTURE.md" in text
     assert "docs/THEORY.md" in text
+
+
+def test_architecture_md_documents_every_shipped_rule_and_audit():
+    """The 'Invariants & enforcement' section must name every lint rule
+    the analysis package ships (and the three compiled-artifact audits):
+    an undocumented rule is an invariant nobody can look up."""
+    from repro.analysis.rules import RULES
+
+    text = open(os.path.join(ROOT, "docs", "ARCHITECTURE.md")).read()
+    start = text.find("## Invariants & enforcement")
+    assert start >= 0, "ARCHITECTURE.md lost its Invariants section"
+    section = text[start:]
+    missing = [name for name in RULES if f"`{name}`" not in section]
+    assert not missing, f"rules undocumented in ARCHITECTURE.md: {missing}"
+    for audit in ("donation", "recompile", "collective-matching"):
+        assert f"`{audit}`" in section, f"audit {audit!r} undocumented"

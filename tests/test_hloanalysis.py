@@ -1,9 +1,13 @@
-"""Loop-aware HLO analysis: trip-count correction validated against XLA."""
+"""Loop-aware HLO analysis: trip-count correction validated against XLA,
+plus parser-hardening regressions: collectives nested in fusion bodies and
+while loops missing known_trip_count must be reported (warn + count once),
+never silently dropped."""
 import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.launch.hloanalysis import analyze_text, parse_module
+from repro.launch.hloanalysis import (HloParseWarning, analyze_text,
+                                      collective_sites, parse_module)
 
 
 def _compile(f, *args):
@@ -63,6 +67,93 @@ def test_parse_module_finds_entry():
                    jax.ShapeDtypeStruct((8,), jnp.float32)).as_text()
     comps, entry = parse_module(hlo)
     assert entry is not None and entry in comps
+
+
+# ---------------------------------------------------------------------------
+# hardening regressions (synthetic HLO): no silent drops
+# ---------------------------------------------------------------------------
+
+_FUSED_PERMUTE_HLO = """\
+HloModule synth_fused
+
+%fbody (p: f32[8]) -> f32[8] {
+  %p = f32[8]{0} parameter(0)
+  ROOT %cp = f32[8]{0} collective-permute(%p), source_target_pairs={{0,1},{1,0}}
+}
+
+ENTRY %main (x: f32[8]) -> f32[8] {
+  %x = f32[8]{0} parameter(0)
+  ROOT %f = f32[8]{0} fusion(%x), kind=kLoop, calls=%fbody
+}
+"""
+
+
+def _while_hlo(trip_annotation):
+    return f"""\
+HloModule synth_while
+
+%wbody (t: (s32[], f32[8])) -> (s32[], f32[8]) {{
+  %t = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %x = f32[8]{{0}} get-tuple-element(%t), index=1
+  %cp = f32[8]{{0}} collective-permute(%x), source_target_pairs={{{{0,1}},{{1,0}}}}
+  ROOT %out = (s32[], f32[8]) tuple(%i, %cp)
+}}
+
+%wcond (t: (s32[], f32[8])) -> pred[] {{
+  %t = (s32[], f32[8]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}}
+
+ENTRY %main (init: (s32[], f32[8])) -> (s32[], f32[8]) {{
+  %init = (s32[], f32[8]) parameter(0)
+  ROOT %w = (s32[], f32[8]) while(%init), condition=%wcond, body=%wbody{trip_annotation}
+}}
+"""
+
+
+def test_fusion_nested_collective_is_counted_and_sited():
+    # regression: a permute hidden inside a fusion body must show up in
+    # both the cost accounting and the site walker (flagged in_fusion).
+    res = analyze_text(_FUSED_PERMUTE_HLO)
+    assert res["collective_bytes_per_kind"]["collective-permute"] == 8 * 4
+    sites = collective_sites(_FUSED_PERMUTE_HLO)
+    assert len(sites) == 1
+    s = sites[0]
+    assert s.opcode == "collective-permute" and s.in_fusion
+    assert s.pairs == ((0, 1), (1, 0))
+    assert s.trip_product == 1 and s.known_trips
+
+
+def test_known_trip_while_multiplies_collective_sites():
+    hlo = _while_hlo(
+        ', backend_config={"known_trip_count":{"n":"5"}}')
+    res = analyze_text(hlo)
+    assert res["unknown_trip_loops"] == 0
+    assert res["collective_bytes_per_kind"]["collective-permute"] == 5 * 8 * 4
+    (s,) = collective_sites(hlo)
+    assert s.trip_product == 5 and s.known_trips and not s.in_fusion
+
+
+def test_unknown_trip_while_warns_and_counts_once():
+    # regression: a while with no known_trip_count used to be a silent
+    # lower bound — now it warns, reports unknown_trip_loops, and the
+    # body's collective is still counted (once).
+    hlo = _while_hlo("")
+    with pytest.warns(HloParseWarning, match="known_trip_count"):
+        res = analyze_text(hlo)
+    assert res["unknown_trip_loops"] == 1
+    assert res["collective_bytes_per_kind"]["collective-permute"] == 8 * 4
+    with pytest.warns(HloParseWarning, match="known_trip_count"):
+        (s,) = collective_sites(hlo)
+    assert s.trip_product == 1 and not s.known_trips
+    # warn=False: same sites, no noise (the auditor's pair-matching path).
+    import warnings as _w
+
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        (s2,) = collective_sites(hlo, warn=False)
+    assert s2 == s
 
 
 def test_gqa_einsum_flops():

@@ -364,3 +364,58 @@ def test_parity_suite_all_ok():
     topk_recs = [r for r in records if r["op"] in ("topk_partials",
                                                    "topk_mask")]
     assert topk_recs and all(r["max_err"] == 0.0 for r in topk_recs)
+
+
+# ---------------------------------------------------------------------------
+# jax.disable_jit vs pallas interpret kernels (why eager_impl exists)
+# ---------------------------------------------------------------------------
+
+DISABLE_JIT_SCRIPT = r"""
+import sys
+sys.setrecursionlimit(600)   # bound the blowup: fail fast, not a core dump
+import jax, jax.numpy as jnp
+from repro.kernels import ops, ref
+
+x = jax.random.normal(jax.random.key(0), (1000,))
+want = ref.top_k_ref(x, 100)
+try:
+    with jax.disable_jit():
+        got = ops.top_k_compress(x, 100, interpret=True)
+except RecursionError:
+    # the pinned jaxlib: pallas interpret mode re-enters itself under
+    # disable_jit. This is WHY ops.eager_impl exists and why the
+    # no-disable-jit lint rule bans disable_jit in kernels/.
+    print("RECURSION_PINNED")
+else:
+    # a future jax may fix the recursion; then it must also be correct.
+    assert jnp.array_equal(got, want)
+    print("DISABLE_JIT_OK")
+
+# eager_impl is the supported un-jitted path either way — same bits.
+eager = ops.eager_impl("top_k_compress")(x, k=100, tmode="interpret",
+                                         imask=True)
+assert jnp.array_equal(eager, want)
+print("EAGER_IMPL_OK")
+"""
+
+
+@pytest.mark.slow
+def test_disable_jit_recursion_pinned_and_eager_impl_escape():
+    """Pins the disable_jit/pallas interaction the no-disable-jit lint
+    rule (repro.analysis) guards: on the pinned jaxlib interpret-mode
+    kernels RECURSE under jax.disable_jit (a newer jax may instead
+    succeed — then bitwise-correctly), while ops.eager_impl stays the
+    supported un-jitted instrumentation path on every version."""
+    import os
+    import subprocess
+    import sys as _sys
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([_sys.executable, "-c", DISABLE_JIT_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert ("RECURSION_PINNED" in out.stdout
+            or "DISABLE_JIT_OK" in out.stdout), out.stdout
+    assert "EAGER_IMPL_OK" in out.stdout, out.stdout
