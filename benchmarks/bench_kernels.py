@@ -149,13 +149,11 @@ def run_throughput(smoke: bool, reps: int) -> List[Dict[str, Any]]:
 
 
 def count_passes(fn_fused, fn_unfused) -> Dict[str, Any]:
-    ops.reset_op_stats()
-    fn_fused()
-    fused = ops.op_stats()
-    ops.reset_op_stats()
-    fn_unfused()
-    unfused = ops.op_stats()
-    ops.reset_op_stats()
+    with ops.op_stats_delta() as df:
+        fn_fused()
+    with ops.op_stats_delta() as du:
+        fn_unfused()
+    fused, unfused = df.as_dict(), du.as_dict()
     assert fused["pallas_calls"] < unfused["pallas_calls"], (fused, unfused)
     assert fused["pad_roundtrips"] < unfused["pad_roundtrips"], (fused,
                                                                  unfused)

@@ -1,6 +1,6 @@
 """Compiled-artifact audits: what the lint cannot see, read off the HLO.
 
-Three invariants live only in the compiled executable, so no source
+Four invariants live only in the compiled executable, so no source
 check can protect them; each is asserted directly against the lowered /
 optimized module of the production superstep
 (``RoundExecutor.lower_superstep``):
@@ -20,10 +20,17 @@ optimized module of the production superstep
   (``round_wire_bits``) prices shifts; if XLA ships different pairs the
   accounting is fiction. Parsed via ``launch.hloanalysis
   .collective_sites`` (fusion- and loop-aware, never silently drops).
+* **telemetry-neutrality** — the ``repro.obs``-instrumented superstep
+  must lower to HLO byte-identical to the uninstrumented one. Telemetry
+  hooks are host-side Python at trace/dispatch time; if one ever touches
+  a traced value (a ``jax.debug.print``, a host coercion, an inserted
+  callback) the instrumented graph diverges and this audit catches it —
+  the zero-syncs / zero-recompiles-on-the-round-path contract, enforced
+  rather than hoped.
 
 ``run_production_audits()`` builds a real 8-node ring sparse superstep
 (needs 8 devices — ``python -m repro.analysis audit`` forces 8 host
-devices; tests do the same in a subprocess) and runs all three. The
+devices; tests do the same in a subprocess) and runs all four. The
 individual ``audit_*`` functions are pure text analysis, testable on
 synthetic HLO and deliberately-broken fixtures.
 """
@@ -42,6 +49,7 @@ __all__ = [
     "audit_recompile",
     "expected_shift_pairs",
     "audit_collective_matching",
+    "audit_telemetry_neutrality",
     "build_audit_executor",
     "run_production_audits",
 ]
@@ -197,12 +205,43 @@ def audit_collective_matching(optimized_text: str, topology,
 
 
 # ---------------------------------------------------------------------------
+# telemetry neutrality
+# ---------------------------------------------------------------------------
+
+
+def audit_telemetry_neutrality(bare_text: str, instrumented_text: str,
+                               name: str = "telemetry-neutrality"
+                               ) -> AuditResult:
+    """The telemetry-instrumented superstep must lower to HLO
+    byte-identical to the bare one: observability may never add a host
+    sync, a traced op, or a recompile to the round path. The caller
+    lowers the SAME function with and without a live ``repro.obs``
+    sink (the instrumented trace really runs its hooks — see
+    ``RoundExecutor.lower_superstep``); any graph divergence lands here
+    as a fingerprint mismatch."""
+    fp_bare = hlo_fingerprint(bare_text)
+    fp_inst = hlo_fingerprint(instrumented_text)
+    data = {"fingerprints": {"bare": fp_bare, "instrumented": fp_inst}}
+    if fp_bare != fp_inst:
+        return AuditResult(
+            name, False,
+            "telemetry instrumentation CHANGED the superstep HLO "
+            f"({fp_bare} != {fp_inst}) — a hook leaked a traced op or "
+            "host sync into the round path", data)
+    return AuditResult(
+        name, True,
+        f"instrumented lowering fingerprint-identical to bare ({fp_bare})",
+        data)
+
+
+# ---------------------------------------------------------------------------
 # the production artifact
 # ---------------------------------------------------------------------------
 
 
 def build_audit_executor(num_nodes: int = 8, *, tau1_max: int = 3,
-                         tau2_max: int = 2, rounds: int = 2, dim: int = 33):
+                         tau2_max: int = 2, rounds: int = 2, dim: int = 33,
+                         telemetry=None):
     """A small but REAL sparse-engine superstep: ring(N) topology, node
     axis manual over an N-device mesh, dynamic taus, donated carry — the
     exact executable class ``launch.train`` dispatches. Returns
@@ -231,7 +270,8 @@ def build_audit_executor(num_nodes: int = 8, *, tau1_max: int = 3,
         return jnp.mean((p["w"][None] - b) ** 2)
 
     ex = RoundExecutor(cfg, loss_fn, opt, engine="sparse", mesh=mesh,
-                       node_axes=("data",), dynamic=True, donate=True)
+                       node_axes=("data",), dynamic=True, donate=True,
+                       telemetry=telemetry)
     state = init_state({"w": jnp.zeros((dim,))}, num_nodes, opt,
                        jax.random.key(0))
     sh = NamedSharding(mesh, P("data"))
@@ -247,8 +287,10 @@ def build_audit_executor(num_nodes: int = 8, *, tau1_max: int = 3,
 
 
 def run_production_audits(num_nodes: int = 8) -> List[AuditResult]:
-    """Build the production sparse superstep and run all three audits."""
+    """Build the production sparse superstep and run all four audits."""
     import jax
+
+    from repro.obs import Telemetry
 
     ex, state, batches, topo = build_audit_executor(num_nodes)
     leaf_names = [str(p) for p, _ in
@@ -258,9 +300,20 @@ def run_production_audits(num_nodes: int = 8) -> List[AuditResult]:
     low_a = ex.lower_superstep(state, batches, taus_a)
     low_b = ex.lower_superstep(state, batches, taus_b)
     compiled_text = low_a.compile().as_text()
+    # identical build with a LIVE telemetry sink: its trace-time hooks
+    # run during this lowering (same example args as low_a), and the
+    # neutrality audit asserts the graph didn't move.
+    tel = Telemetry()
+    ex_inst, state_i, batches_i, _ = build_audit_executor(
+        num_nodes, telemetry=tel)
+    low_inst = ex_inst.lower_superstep(state_i, batches_i, taus_a)
+    assert any(e["type"] == "compile" for e in tel.events), (
+        "instrumented audit lowering never ran its telemetry hooks — "
+        "the neutrality comparison would be vacuous")
     return [
         audit_donation(compiled_text, leaf_names),
         audit_recompile([low_a.as_text(), low_b.as_text()],
                         labels=["taus=[[1,1],[1,1]]", "taus=[[3,0],[2,2]]"]),
         audit_collective_matching(compiled_text, topo),
+        audit_telemetry_neutrality(low_a.as_text(), low_inst.as_text()),
     ]

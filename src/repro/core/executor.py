@@ -31,6 +31,14 @@ schedule changes and round dispatch near-zero-cost:
 * **Overlap** — ``HostPrefetcher`` builds the next superstep's batches on a
   background thread while the device runs, and ``MetricsBuffer`` defers the
   host-blocking metric fetch to log boundaries.
+* **Telemetry** — every class here takes an optional ``telemetry=`` sink
+  (``repro.obs.Telemetry``) and emits typed events: ``compile`` when a
+  superstep traces, ``superstep`` per dispatch, ``prefetch`` build/cancel
+  spans from the worker thread, ``flush`` when the buffer syncs. All hooks
+  are host-side Python around the jitted calls — they add ZERO ops to the
+  round-path HLO and ZERO host syncs (the ``telemetry-neutrality`` audit
+  in ``repro.analysis`` proves the instrumented lowering is
+  fingerprint-identical to the bare one).
 
 A keyed compile cache (``dynamic=False``) remains as the static fallback for
 configs the dynamic path can't express (``mixing_impl='dense_power'``).
@@ -98,6 +106,9 @@ class RoundExecutor:
         cached.
       donate: donate the DFLState argument of every dispatch (the caller
         must treat the passed-in state as consumed).
+      telemetry: optional ``repro.obs.Telemetry`` sink; dispatches emit
+        ``superstep`` events and traces emit ``compile`` events on the
+        "dispatch" track. Host-side only — never traced into the HLO.
 
     ``dispatch(state, batches, tau1, tau2)`` runs one superstep: batches
     leaves are [K, tau1_max, ...] (dynamic) / [K, tau1, ...]-compatible
@@ -125,6 +136,7 @@ class RoundExecutor:
         use_kernels: bool = False,
         dynamic: bool = True,
         donate: bool = True,
+        telemetry=None,
     ):
         self.cfg = cfg
         self.dynamic = dynamic
@@ -134,9 +146,11 @@ class RoundExecutor:
             node_axes=tuple(node_axes), use_kernels=use_kernels)
         self._loss_fn = loss_fn
         self._opt = opt
+        self._tel = telemetry
         self._trace_count = 0
         self.dispatch_count = 0
         self.rounds_dispatched = 0
+        self._in_warmup = False
         self._static_cache: Dict[Tuple[int, int], Callable] = {}
         if dynamic:
             round_fn = make_round_fn(cfg, loss_fn, opt, dynamic_taus=True,
@@ -144,6 +158,7 @@ class RoundExecutor:
 
             def superstep(state: DFLState, batches: PyTree, taus):
                 self._trace_count += 1  # fires per trace == per compile
+                self._note_trace("dynamic")
 
                 def body(st, xs):
                     b, tau = xs
@@ -156,6 +171,18 @@ class RoundExecutor:
 
             self._dynamic_fn = jax.jit(
                 superstep, donate_argnums=(0,) if donate else ())
+
+    # -- telemetry ---------------------------------------------------------
+
+    def _note_trace(self, kind: str) -> None:
+        """Record one XLA trace of a superstep. Runs at TRACE time on the
+        host (a Python side-effect of the traced closure, like the counter
+        itself) — it inserts nothing into the jaxpr, so the lowered HLO is
+        identical with or without a sink (audited)."""
+        if self._tel is not None:
+            self._tel.emit("compile", track="dispatch",
+                           name=f"superstep-trace-{kind}",
+                           count=self._trace_count)
 
     # -- properties --------------------------------------------------------
 
@@ -184,7 +211,10 @@ class RoundExecutor:
         fingerprinting lowerings at different trajectory values,
         collective matching off the optimized HLO's permute pairs.
         Audit lowerings do not touch ``compile_count`` (the
-        zero-recompile assertions only count *dispatch* traces).
+        zero-recompile assertions only count *dispatch* traces). A
+        ``telemetry`` sink stays LIVE through the lowering on purpose:
+        the ``telemetry-neutrality`` audit compares instrumented vs bare
+        lowerings, so the instrumented trace must actually run its hooks.
         Dynamic mode only — the static fallback intentionally keys
         compiles on (tau1, tau2)."""
         if not self.dynamic:
@@ -246,6 +276,7 @@ class RoundExecutor:
 
             def superstep(state: DFLState, batches: PyTree):
                 self._trace_count += 1
+                self._note_trace("static")
 
                 return jax.lax.scan(round_fn, state, batches)
 
@@ -271,6 +302,23 @@ class RoundExecutor:
         arr = self._check_trajectory(taus, k)
         self.dispatch_count += 1
         self.rounds_dispatched += k
+        if self._tel is None:
+            return self._run_trajectory(state, batches, arr, k)
+        t0 = self._tel.now()
+        out = self._run_trajectory(state, batches, arr, k)
+        # On sync backends (this jaxlib's CPU client) the superstep
+        # EXECUTES inside the call, so dur is real device time; on async
+        # backends it is enqueue cost and the flush event carries the rest.
+        # Warmup dispatches are tagged apart so reports never conflate
+        # compile-warming with measured supersteps.
+        prefix = "warmup-superstep" if self._in_warmup else "superstep"
+        self._tel.emit("superstep", track="dispatch", name=f"{prefix}-k{k}",
+                       t=t0, dur=self._tel.now() - t0, k=k,
+                       warmup=self._in_warmup, dispatch=self.dispatch_count)
+        return out
+
+    def _run_trajectory(self, state: DFLState, batches: PyTree,
+                        arr: np.ndarray, k: int) -> Tuple[DFLState, dict]:
         if self.dynamic:
             return self._dynamic_fn(state, batches, jnp.asarray(arr))
         # static fallback: contiguous uniform segments, padding rows
@@ -327,8 +375,17 @@ class RoundExecutor:
         statistics are left untouched."""
         dummy = jax.tree_util.tree_map(jnp.copy, state)
         n_dispatch, n_rounds = self.dispatch_count, self.rounds_dispatched
-        out = self.dispatch(dummy, batches, tau1, tau2)
-        jax.block_until_ready(out)
+        self._in_warmup = True
+        try:
+            if self._tel is not None:
+                with self._tel.span("warmup", track="dispatch"):
+                    out = self.dispatch(dummy, batches, tau1, tau2)
+                    jax.block_until_ready(out)
+            else:
+                out = self.dispatch(dummy, batches, tau1, tau2)
+                jax.block_until_ready(out)
+        finally:
+            self._in_warmup = False
         self.dispatch_count, self.rounds_dispatched = n_dispatch, n_rounds
 
 
@@ -341,20 +398,43 @@ class HostPrefetcher:
     ``(round0, k, tau1)``) lets the caller detect a stale prefetch after a
     re-plan changed the schedule and rebuild inline — re-plans are rare, so
     at most one chunk is ever discarded.
+
+    Failure paths are hard errors, not asserts (they survive ``-O``):
+    double-``schedule`` and ``take`` without a schedule raise
+    ``RuntimeError``; a worker exception is re-raised on ``take``.
+    ``stats`` counts scheduled/taken/cancelled/stale/errors; with a
+    ``telemetry`` sink the WORKER thread emits a ``prefetch`` build span
+    (so host batch construction shows as its own track in the timeline)
+    and cancels/stales emit instants.
     """
 
-    def __init__(self):
+    def __init__(self, telemetry=None):
         self._pending: Optional[Tuple[threading.Thread, dict, Any]] = None
+        self._tel = telemetry
+        self.stats: Dict[str, int] = {
+            "scheduled": 0, "taken": 0, "cancelled": 0, "stale": 0,
+            "errors": 0}
 
     def schedule(self, fn: Callable, *args, meta: Any = None) -> None:
-        assert self._pending is None, "previous prefetch not taken"
+        if self._pending is not None:
+            raise RuntimeError(
+                "previous prefetch not taken — call take() or cancel() "
+                "before scheduling another build")
+        self.stats["scheduled"] += 1
         box: dict = {}
+        tel = self._tel
 
         def work():
+            t0 = tel.now() if tel is not None else 0.0
             try:
                 box["out"] = fn(*args)
             except BaseException as e:  # re-raised on take()
                 box["err"] = e
+            finally:
+                if tel is not None:
+                    tel.emit("prefetch", track="prefetch", name="build",
+                             t=t0, dur=tel.now() - t0, action="build",
+                             ok="err" not in box)
 
         t = threading.Thread(target=work, daemon=True)
         t.start()
@@ -365,22 +445,38 @@ class HostPrefetcher:
         return self._pending[2] if self._pending is not None else None
 
     def take(self) -> Tuple[Any, Any]:
-        assert self._pending is not None, "nothing scheduled"
+        if self._pending is None:
+            raise RuntimeError("nothing scheduled — call schedule() first")
         t, box, meta = self._pending
         self._pending = None
         t.join()
         if "err" in box:
+            self.stats["errors"] += 1
             raise box["err"]
+        self.stats["taken"] += 1
         return box["out"], meta
 
     def cancel(self) -> None:
         """Discard a stale prefetch (joins the worker; a build error in
         data that will never be used is dropped, not re-raised)."""
-        if self._pending is not None:
-            try:
-                self.take()
-            except BaseException:
-                pass
+        if self._pending is None:
+            return
+        t, box, _meta = self._pending
+        self._pending = None
+        t.join()
+        self.stats["cancelled"] += 1
+        if self._tel is not None:
+            self._tel.emit("prefetch", track="prefetch", name="cancel",
+                           action="cancel")
+
+    def mark_stale(self) -> None:
+        """Caller-noted stale take: the prefetched chunk was rebuilt
+        because a re-plan changed the schedule after it was scheduled
+        (counts toward the hit/stale attribution in run reports)."""
+        self.stats["stale"] += 1
+        if self._tel is not None:
+            self._tel.emit("prefetch", track="prefetch", name="stale",
+                           action="stale")
 
 
 class MetricsBuffer:
@@ -393,19 +489,29 @@ class MetricsBuffer:
     rounds it covered (per-round dispatch would instead pay one sync per
     round).
 
-    ``dispatched_at``: pass ``time.time()`` taken BEFORE the dispatch call.
-    On synchronous backends (this jaxlib's CPU client) the superstep
-    EXECUTES inside ``dispatch``, so a window opened at push time would
-    measure ~zero; the pre-dispatch stamp of the window's first chunk is
-    the correct wall-clock origin on sync and async backends both. It also
-    means a compile occurring inside a dispatch lands in that window —
+    ``dispatched_at``: pass ``time.perf_counter()`` taken BEFORE the
+    dispatch call. On synchronous backends (this jaxlib's CPU client) the
+    superstep EXECUTES inside ``dispatch``, so a window opened at push time
+    would measure ~zero; the pre-dispatch stamp of the window's first chunk
+    is the correct wall-clock origin on sync and async backends both. It
+    also means a compile occurring inside a dispatch lands in that window —
     warm every batch shape up front (see ``launch.train``) so measured
     rounds stay compile-free.
+
+    All window arithmetic is on the MONOTONIC ``perf_counter`` clock: a
+    wall-clock jump (NTP step, DST) must never corrupt ``round_s``, which
+    feeds the ``AdaptiveController`` least-squares cost fit. Absolute
+    timestamps exist only in telemetry ``run`` headers.
+
+    With a ``telemetry`` sink, ``flush`` emits a ``flush`` event spanning
+    the host-blocking ``block_until_ready`` (the metrics track shows
+    exactly when — and for how long — the host actually synced).
     """
 
-    def __init__(self):
+    def __init__(self, telemetry=None):
         self._pending: List[Tuple[int, int, int, int, dict]] = []
         self._window_start: Optional[float] = None
+        self._tel = telemetry
 
     def push(self, round0: int, k: int, tau1: Optional[int],
              tau2: Optional[int], metrics: dict,
@@ -417,7 +523,7 @@ class MetricsBuffer:
         actually ran."""
         if self._window_start is None:
             self._window_start = (dispatched_at if dispatched_at is not None
-                                  else time.time())
+                                  else time.perf_counter())
         self._pending.append((round0, k, tau1, tau2, metrics))
 
     @property
@@ -428,9 +534,16 @@ class MetricsBuffer:
         """Block once; return one row per completed round, in order."""
         if not self._pending:
             return []
+        block0 = time.perf_counter()
         jax.block_until_ready([m for *_, m in self._pending])
-        elapsed = time.time() - (self._window_start or time.time())
+        now = time.perf_counter()
+        elapsed = now - (self._window_start or now)
         n = self.pending_rounds
+        if self._tel is not None:
+            block_s = now - block0
+            self._tel.emit("flush", track="metrics", name="metrics-flush",
+                           t=self._tel.now() - block_s, dur=block_s,
+                           rounds=n, window_s=elapsed)
         per_round_s = elapsed / max(n, 1)
         rows: List[dict] = []
         for round0, k, tau1, tau2, metrics in self._pending:

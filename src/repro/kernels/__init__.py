@@ -30,6 +30,7 @@ from repro.kernels.ops import (
     choco_topk_move,
     gossip_mix,
     op_stats,
+    op_stats_delta,
     qsgd_quantize,
     reset_op_stats,
     top_k_compress,
@@ -65,5 +66,6 @@ __all__ = [
     "choco_qsgd_move",
     "choco_topk_move",
     "op_stats",
+    "op_stats_delta",
     "reset_op_stats",
 ]

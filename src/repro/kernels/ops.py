@@ -28,11 +28,16 @@ Entry points
 and tests can ASSERT the fused paths touch the buffer fewer times; they
 tick when wrapper bodies execute, so count over ``eager_impl`` calls
 (un-jitted, deterministic per call) — see ``benchmarks/bench_kernels``.
+Scope a measurement with ``with op_stats_delta() as d:`` — snapshot
+arithmetic, no global reset, so concurrent/nested measurement scopes
+can't clobber each other (``reset_op_stats()`` is deprecated for exactly
+that race).
 """
 from __future__ import annotations
 
+import contextlib
 import warnings
-from typing import Dict, Optional, Tuple
+from typing import Dict, Iterator, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -65,7 +70,69 @@ def op_stats() -> Dict[str, int]:
     return dict(_STATS)
 
 
+class OpStatsDelta:
+    """Counter deltas observed inside an ``op_stats_delta()`` block.
+
+    Values are populated at context EXIT; reading earlier raises (there
+    is no meaningful partial answer while the block is still counting).
+    """
+
+    def __init__(self):
+        self._delta: Optional[Dict[str, int]] = None
+
+    def _close(self, delta: Dict[str, int]) -> None:
+        self._delta = delta
+
+    def as_dict(self) -> Dict[str, int]:
+        if self._delta is None:
+            raise RuntimeError(
+                "op_stats_delta block still open — deltas exist only "
+                "after the with-block exits")
+        return dict(self._delta)
+
+    def __getitem__(self, key: str) -> int:
+        return self.as_dict()[key]
+
+    @property
+    def pad_roundtrips(self) -> int:
+        return self["pad_roundtrips"]
+
+    @property
+    def pallas_calls(self) -> int:
+        return self["pallas_calls"]
+
+
+@contextlib.contextmanager
+def op_stats_delta() -> Iterator[OpStatsDelta]:
+    """Scoped counter attribution: yields an ``OpStatsDelta`` whose
+    per-key deltas (work done INSIDE the block) are readable after exit.
+
+    Pure snapshot arithmetic against the module counters — nothing is
+    reset, so nested scopes and interleaved measurement sites (the
+    benchmark suite, per-superstep telemetry in ``launch.train``) each
+    see exactly their own window::
+
+        with op_stats_delta() as d:
+            ops.eager_impl("choco_move")(x, y, my, 0.5, interpret=True)
+        assert d.pad_roundtrips == 3
+    """
+    before = dict(_STATS)
+    d = OpStatsDelta()
+    try:
+        yield d
+    finally:
+        d._close({k: _STATS[k] - before.get(k, 0) for k in _STATS})
+
+
 def reset_op_stats() -> None:
+    """Deprecated: zeroes the GLOBAL counters, which races every other
+    measurement scope in the process (two bench sections resetting under
+    each other read garbage). Use ``op_stats_delta()``."""
+    warnings.warn(
+        "repro.kernels.ops.reset_op_stats() is deprecated: a global reset "
+        "races across concurrent measurement scopes — use "
+        "`with op_stats_delta() as d:` snapshot/delta attribution instead.",
+        DeprecationWarning, stacklevel=2)
     for k in _STATS:
         _STATS[k] = 0
 

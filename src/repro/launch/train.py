@@ -40,6 +40,24 @@ per-round [K, 2] (tau1, tau2) trajectory from
 ``executor.dispatch_trajectory`` (probe rounds for identifiability ride
 the last round of a chunk), still with zero recompiles. "fixed" pins the
 CLI taus.
+
+Telemetry (--telemetry-out events.jsonl): every run streams typed events
+through ``repro.obs.Telemetry`` — rounds, supersteps, plan/replan/probe
+decisions, compiles, prefetch builds, metric flushes, checkpoints, and
+per-superstep counter snapshots (kernel op_stats deltas, compile count,
+wire-bit totals, prefetch hit/stale). The --history-out JSON is a
+schema-versioned VIEW over that stream (``repro.obs.history_view``) with
+the same fields as before plus ``schema_version``. Inspect a stream with
+``python -m repro.obs report|validate|trace export``. --profile-dir DIR
+additionally wraps the run in ``jax.profiler`` so XLA device activity
+can be lined up under the same timeline. All telemetry is host-side:
+zero syncs, zero recompiles on the round path (audited —
+``telemetry-neutrality`` in ``repro.analysis``).
+
+All durations here are measured on the monotonic ``time.perf_counter``
+clock (a wall-clock jump must never corrupt ``round_s`` or poison the
+controller's least-squares fit); the only absolute timestamp is the
+telemetry run header's ``wall_start``.
 """
 from __future__ import annotations
 
@@ -60,8 +78,10 @@ from repro.core import (DFLConfig, HostPrefetcher, MetricsBuffer,
                         paper_quasi_ring)
 from repro.core.compression import Identity, tree_wire_bits
 from repro.data.lm import SyntheticLM, lm_batches_for_dfl
+from repro.kernels.ops import op_stats_delta
 from repro.launch.steps import kernelize_compressor
 from repro.models import train_loss, init_params
+from repro.obs import Telemetry, history_view
 from repro.optim import sgd, momentum_sgd, adamw
 from repro.planner import AdaptiveController, Budget, unit_cost_model
 from repro.planner.optimize import DEFAULT_GRID
@@ -132,8 +152,19 @@ def main(argv=None) -> None:
                          "(needs --plan-budget and --dispatch fused); "
                          "auto = adaptive iff --plan-budget is set")
     ap.add_argument("--history-out", default="",
-                    help="write the round/plan history JSON here")
+                    help="write the round/plan history JSON here (a "
+                         "schema-versioned view over the telemetry stream)")
+    ap.add_argument("--telemetry-out", default="",
+                    help="append the full typed event stream here as JSONL "
+                         "(inspect with `python -m repro.obs ...`)")
+    ap.add_argument("--profile-dir", default="",
+                    help="also capture a jax.profiler trace of the run "
+                         "(XLA device activity) into this directory")
     args = ap.parse_args(argv)
+
+    # The telemetry sink exists unconditionally (in-memory if no
+    # --telemetry-out): the history JSON is derived from it either way.
+    tel = Telemetry(path=args.telemetry_out or None, meta=dict(vars(args)))
 
     arch = get_arch(args.arch)
     cfg = arch.reduced
@@ -191,7 +222,7 @@ def main(argv=None) -> None:
         controller = AdaptiveController(
             Budget(wall_clock_s=args.plan_budget), prior,
             sigma=1.0, f_gap=1.0, replan_every=args.replan_every,
-            compressors=(comp,))
+            compressors=(comp,), telemetry=tel)
         p = controller.initial_plan()
         tau1, tau2 = p.tau1, p.tau2
         print(f"planned tau=({tau1},{tau2}) for budget "
@@ -219,15 +250,27 @@ def main(argv=None) -> None:
     executor = RoundExecutor(
         dcfg_max, loss_fn, opt, engine=engine, mesh=mesh,
         node_axes=("nodes",), use_kernels=args.use_kernels,
-        dynamic=args.dispatch == "fused")
+        dynamic=args.dispatch == "fused", telemetry=tel)
 
     # Wire accounting is DEPLOYMENT cost (what a real DFL network ships:
     # engine="auto" = per-neighbor when circulant), not the host-simulation
     # engine's, so the printed MB/round is host-device-count independent
     # and comparable with benchmarks/common.py.
     import dataclasses as _dc
-    bits = round_wire_bits(_dc.replace(dcfg_max, tau1=tau1, tau2=tau2),
-                           params0, engine="auto")
+
+    wire_cache = {}
+
+    def wire_bits_for(t1: int, t2: int) -> float:
+        """Deployment wire bits for one (tau1, tau2) round (memoized —
+        the schedule grid is tiny)."""
+        key = (int(t1), int(t2))
+        if key not in wire_cache:
+            wire_cache[key] = round_wire_bits(
+                _dc.replace(dcfg_max, tau1=key[0], tau2=key[1]),
+                params0, engine="auto")
+        return wire_cache[key]
+
+    bits = wire_bits_for(tau1, tau2)
     print(f"arch={cfg.name} nodes={n} tau=({tau1},{tau2}) "
           f"zeta={topology.zeta:.3f} comp={args.compression or 'none'} "
           f"engine={engine} dispatch={args.dispatch} "
@@ -296,7 +339,7 @@ def main(argv=None) -> None:
         compiles per (shape, (tau1, tau2)) key. Warmup wall-clock is real
         budget spend and is charged to the controller, but never enters
         the per-round cost fit."""
-        tw0 = time.time()
+        tw0 = time.perf_counter()
         before = executor.compile_count
         for kk in ks:
             if args.dispatch == "fused":
@@ -306,47 +349,74 @@ def main(argv=None) -> None:
             warmed_shapes.add(kk)
         if executor.compile_count > before:
             print(f"warmed {executor.compile_count - before} superstep "
-                  f"executable(s) in {time.time()-tw0:.1f}s")
+                  f"executable(s) in {time.perf_counter()-tw0:.1f}s")
         if controller is not None:
-            controller.spend_overhead(time.time() - tw0)
+            controller.spend_overhead(time.perf_counter() - tw0)
+
+    profiling = False
+    if args.profile_dir:
+        try:
+            jax.profiler.start_trace(args.profile_dir)
+            profiling = True
+            print(f"jax profiler trace -> {args.profile_dir}")
+        except Exception as e:  # profiler backends vary; never fatal
+            print(f"profiler unavailable ({e}); continuing without")
 
     if args.rounds > 0:
         warm_executables(remaining_chunk_lens(start_round, 0), tau1, tau2)
     compiles_after_warmup = executor.compile_count
 
-    history = {"round": [], "loss": [], "consensus_sq": [], "tau1": [],
-               "tau2": [], "round_s": []}
-    buffer = MetricsBuffer()
-    prefetch = HostPrefetcher()
-    t0 = time.time()
+    buffer = MetricsBuffer(telemetry=tel)
+    prefetch = HostPrefetcher(telemetry=tel)
+    t0 = time.perf_counter()
     rounds_done = 0
+    wire_total = 0.0
     last_ckpt = start_round
     last_loss = float("nan")
 
+    def emit_counters(round0: int, kk: int, opd) -> None:
+        """Per-superstep counter attribution: kernel op_stats deltas from
+        the enclosing dispatch, cumulative compile/wire/prefetch state."""
+        tel.emit("counters", track="dispatch", name="superstep-counters",
+                 round0=round0, k=kk,
+                 compile_count=executor.compile_count,
+                 wire_bits_total=wire_total,
+                 prefetch_taken=prefetch.stats["taken"],
+                 prefetch_stale=prefetch.stats["stale"],
+                 prefetch_cancelled=prefetch.stats["cancelled"],
+                 **{f"kernel_{key}": v for key, v in opd.as_dict().items()})
+
+    def do_checkpoint(step: int, extra: dict) -> None:
+        ck0 = tel.now()
+        save_checkpoint(args.ckpt_dir, step, state.params, extra)
+        tel.emit("checkpoint", track="checkpoint", name=f"ckpt-{step}",
+                 t=ck0, dur=tel.now() - ck0, round=step)
+
     def flush_rows():
-        """Materialize buffered metrics into history/logs and feed the
-        controller. Adaptive mode observes per round (uniform chunks, so
-        the amortized round_s is exact); trajectory mode observes per
+        """Materialize buffered metrics into round events/logs and feed
+        the controller. Adaptive mode observes per round (uniform chunks,
+        so the amortized round_s is exact); trajectory mode observes per
         CHUNK (heterogeneous schedules share one fused dispatch — only
         the chunk total is measurable, and ``observe_chunk``'s aggregated
-        fit row keeps the least-squares fit exact)."""
-        nonlocal last_loss
+        fit row keeps the least-squares fit exact). The history JSON is
+        reconstructed from these events at the end (history_view)."""
+        nonlocal last_loss, wire_total
         rows = buffer.flush()
         for row in rows:
             r = row["round"]
-            history["round"].append(r + 1)
-            history["loss"].append(row["loss"])
-            history["consensus_sq"].append(row["consensus_sq"])
-            history["tau1"].append(row["tau1"])
-            history["tau2"].append(row["tau2"])
-            history["round_s"].append(row["round_s"])
+            wire_total += wire_bits_for(row["tau1"], row["tau2"])
+            tel.emit("round", track="rounds", name=f"round-{r}",
+                     round=r, tau1=row["tau1"], tau2=row["tau2"],
+                     loss=row["loss"], consensus_sq=row["consensus_sq"],
+                     round_s=row["round_s"],
+                     wire_bits=wire_bits_for(row["tau1"], row["tau2"]))
             last_loss = row["loss"]
             if (r + 1) % args.log_every == 0:
                 done = r + 1 - start_round
                 print(f"round {r+1:4d} tau=({row['tau1']},{row['tau2']}) "
                       f"loss={row['loss']:.4f} "
                       f"consensus={row['consensus_sq']:.3e} "
-                      f"({(time.time()-t0)/max(done,1):.1f}s/round)",
+                      f"({(time.perf_counter()-t0)/max(done,1):.1f}s/round)",
                       flush=True)
             if controller is not None and schedule_mode != "trajectory":
                 controller.observe(row["tau1"], row["tau2"], row["round_s"])
@@ -374,32 +444,34 @@ def main(argv=None) -> None:
                 # budget-paced short chunk, or the shifted chunk grid
                 # after one): a new batch SHAPE — warm it on dummy data
                 # so the measured rounds stay compile-free.
-                tw0 = time.time()
+                tw0 = time.perf_counter()
                 executor.warmup(state, dummy_batches(len(taus)))
                 warmed_shapes.add(len(taus))
-                controller.spend_overhead(time.time() - tw0)
+                controller.spend_overhead(time.perf_counter() - tw0)
             # host batch build is real wall-clock the budget pays for
             # (trajectory mode has no prefetch overlap: the chunk's
             # schedule is only known now) — charge it as overhead, not as
             # round time.
-            tb0 = time.time()
-            batches = stack_round_batches(
-                [round_batch(r + i, int(t1))
-                 for i, (t1, _t2) in enumerate(taus)], tau1_max)
-            controller.spend_overhead(time.time() - tb0)
-            t_dispatch = time.time()
-            state, metrics = executor.dispatch_trajectory(
-                state, batches, taus)
+            tb0 = time.perf_counter()
+            with tel.span("batch-build", track="prefetch"):
+                batches = stack_round_batches(
+                    [round_batch(r + i, int(t1))
+                     for i, (t1, _t2) in enumerate(taus)], tau1_max)
+            controller.spend_overhead(time.perf_counter() - tb0)
+            t_dispatch = time.perf_counter()
+            with op_stats_delta() as opd:
+                state, metrics = executor.dispatch_trajectory(
+                    state, batches, taus)
             buffer.push(r, len(taus), None, None, metrics,
                         dispatched_at=t_dispatch)
             r += len(taus)
             rounds_done += len(taus)
             flush_rows()   # every realized round enters the cost fit
+            emit_counters(r - len(taus), len(taus), opd)
             if (args.ckpt_every and args.ckpt_dir
                     and r // args.ckpt_every
                     > last_ckpt // args.ckpt_every):
-                save_checkpoint(args.ckpt_dir, r, state.params,
-                                {"loss": last_loss})
+                do_checkpoint(r, {"loss": last_loss})
                 last_ckpt = r
 
     # fixed/adaptive modes: the prefetched uniform-schedule superstep loop
@@ -411,10 +483,14 @@ def main(argv=None) -> None:
     while r < end:
         batches, meta = prefetch.take()
         if meta != (r, k, tau1):   # stale after a re-plan changed tau1
-            batches = build_batches(r, k, tau1)
-        t_dispatch = time.time()   # sync backends EXECUTE inside dispatch
-        state, metrics = executor.dispatch(state, batches, tau1, tau2)
+            prefetch.mark_stale()
+            with tel.span("stale-rebuild", track="prefetch"):
+                batches = build_batches(r, k, tau1)
+        t_dispatch = time.perf_counter()  # sync backends EXECUTE inside
+        with op_stats_delta() as opd:     # dispatch
+            state, metrics = executor.dispatch(state, batches, tau1, tau2)
         buffer.push(r, k, tau1, tau2, metrics, dispatched_at=t_dispatch)
+        emit_counters(r, k, opd)
         r += k
         rounds_done += k
         # overlap: build the NEXT superstep's batches while the device runs
@@ -437,8 +513,7 @@ def main(argv=None) -> None:
                 and r // args.ckpt_every > last_ckpt // args.ckpt_every):
             # superstep granularity: the checkpoint lands at the first
             # superstep edge at/after the --ckpt-every multiple.
-            save_checkpoint(args.ckpt_dir, r, state.params,
-                            {"loss": last_loss})
+            do_checkpoint(r, {"loss": last_loss})
             last_ckpt = r
         if controller is not None:
             new = controller.maybe_replan(rounds_done)
@@ -464,24 +539,41 @@ def main(argv=None) -> None:
         prefetch.cancel()
     flush_rows()
     if args.ckpt_dir:
-        save_checkpoint(args.ckpt_dir, start_round + rounds_done,
-                        state.params, {})
-    if controller is not None:
-        history["plan_events"] = controller.history
-    # the realized per-round schedule as [tau1, tau2] rows — what each
-    # round ACTUALLY ran (= the dispatched trajectory under --schedule
-    # trajectory, probe rounds included).
-    history["schedule"] = [[t1, t2] for t1, t2 in
-                           zip(history["tau1"], history["tau2"])]
-    history["schedule_mode"] = schedule_mode
-    # compile_count must equal compile_count_warmup under fused dispatch:
-    # every re-plan reused the warmed executables.
-    history["compile_count_warmup"] = compiles_after_warmup
-    history["compile_count"] = executor.compile_count
+        do_checkpoint(start_round + rounds_done, {})
+    if profiling:
+        try:
+            jax.profiler.stop_trace()
+        except Exception as e:
+            print(f"profiler stop failed ({e})")
+    # run-level summary counters: the stream-derived history view reads
+    # schedule_mode / compile counts from here, and reports read the
+    # final wire/prefetch totals. compile_count must equal
+    # compile_count_warmup under fused dispatch: every re-plan reused the
+    # warmed executables.
+    tel.emit("counters", track="run", name="run-summary",
+             schedule_mode=schedule_mode,
+             rounds_done=rounds_done,
+             engine=engine,
+             compile_count_warmup=compiles_after_warmup,
+             compile_count=executor.compile_count,
+             wire_bits_total=wire_total,
+             prefetch_taken=prefetch.stats["taken"],
+             prefetch_stale=prefetch.stats["stale"],
+             prefetch_cancelled=prefetch.stats["cancelled"],
+             wall_s=time.perf_counter() - t0)
+    # the history JSON is a VIEW over the event stream now: same legacy
+    # fields (round/loss/consensus_sq/tau1/tau2/round_s, plan_events, the
+    # realized [tau1, tau2] schedule rows, schedule_mode, compile counts)
+    # plus schema_version.
+    history = history_view(tel.events)
     if args.history_out:
         with open(args.history_out, "w") as f:
             json.dump(history, f, indent=1)
         print(f"history -> {args.history_out}")
+    if args.telemetry_out:
+        print(f"telemetry -> {args.telemetry_out} "
+              f"({len(tel.events)} events)")
+    tel.close()
     print("done")
 
 

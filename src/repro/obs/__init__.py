@@ -1,0 +1,58 @@
+"""repro.obs — the unified telemetry subsystem.
+
+Three pillars (see docs/ARCHITECTURE.md "Observability"):
+
+1. **Event stream** (``events``, ``telemetry``): a ``Telemetry`` sink
+   collects typed, timestamped events as append-only JSONL;
+   ``RoundExecutor``/``MetricsBuffer``/``HostPrefetcher``,
+   ``AdaptiveController`` and ``launch/train.py`` emit into it, and the
+   ``--history-out`` JSON is a schema-versioned view over the stream
+   (``history.history_view``).
+2. **Span tracing** (``telemetry.span``, ``trace``): host-side spans on
+   monotonic ``perf_counter`` clocks, exported as Chrome trace-event /
+   Perfetto-loadable JSON — one track per concern.
+3. **Counter attribution** (``report``): kernel ``op_stats`` deltas,
+   compile counts, wire-bit totals and prefetch hit/stale snapshots
+   attributed to their superstep; ``python -m repro.obs report`` prints
+   the per-phase cost breakdown.
+
+Contract: telemetry adds ZERO host syncs and ZERO recompiles on the
+round path (this package never imports jax; the ``telemetry-neutrality``
+audit in ``repro.analysis`` proves the instrumented superstep HLO is
+fingerprint-identical to the uninstrumented one).
+
+CLI::
+
+    python -m repro.obs validate events.jsonl [--min-tracks N]
+    python -m repro.obs trace export events.jsonl --out trace.json
+    python -m repro.obs report events.jsonl
+"""
+from repro.obs.events import (EVENT_TYPES, REQUIRED_DATA, SCHEMA_VERSION,
+                              make_event, read_events, validate_event,
+                              validate_events, validate_stream, write_events)
+from repro.obs.history import HISTORY_SCHEMA_VERSION, history_view
+from repro.obs.report import format_report, run_report
+from repro.obs.telemetry import NullTelemetry, Telemetry
+from repro.obs.trace import (export_chrome_trace, to_chrome_trace,
+                             trace_track_names)
+
+__all__ = [
+    "EVENT_TYPES",
+    "REQUIRED_DATA",
+    "SCHEMA_VERSION",
+    "HISTORY_SCHEMA_VERSION",
+    "Telemetry",
+    "NullTelemetry",
+    "make_event",
+    "read_events",
+    "write_events",
+    "validate_event",
+    "validate_events",
+    "validate_stream",
+    "history_view",
+    "run_report",
+    "format_report",
+    "to_chrome_trace",
+    "export_chrome_trace",
+    "trace_track_names",
+]

@@ -84,6 +84,7 @@ class AdaptiveController:
         gamma: float = 1.0,
         L: float = 1.0,
         process: Optional[CostProcess] = None,
+        telemetry=None,
     ):
         assert replan_every >= 1
         self.budget = budget
@@ -101,6 +102,7 @@ class AdaptiveController:
         self.spent_bits = 0.0
         self.spent_j = 0.0
         self.history: List[dict] = []   # one dict per (re)plan event
+        self._telemetry = telemetry     # optional repro.obs.Telemetry sink
         self.current: Optional[Plan] = None
         self.exhausted = False
 
@@ -125,10 +127,15 @@ class AdaptiveController:
             return None
         return Budget(wall_clock_s=wall, wire_bits=bits, energy_j=joules)
 
+    # telemetry event type per plan cause ("trajectory" chunks are plan
+    # decisions too; probes get their own type so timelines can mark the
+    # identifiability injections).
+    _EVENT_TYPE = {"initial": "plan", "replan": "replan", "probe": "probe"}
+
     def _emit(self, round_idx: int, cause: str, **extra) -> None:
         p = self.current
         assert p is not None
-        self.history.append({
+        rec = {
             "round": round_idx,
             "cause": cause,
             "tau1": p.tau1,
@@ -141,7 +148,13 @@ class AdaptiveController:
             "t_gossip_step": p.round_cost.t_gossip_step,
             "spent_s": self.spent_s,
             **extra,
-        })
+        }
+        self.history.append(rec)
+        if self._telemetry is not None:
+            # mirror the exact record into the event stream: the
+            # --history-out plan_events view reconstructs from these.
+            self._telemetry.emit(self._EVENT_TYPE.get(cause, "plan"),
+                                 track="planner", name=cause, **rec)
 
     def initial_plan(self) -> Plan:
         """Plan round 0 from the prior cost model and the full budget."""

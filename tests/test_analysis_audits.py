@@ -10,6 +10,10 @@ constant, a wrong permute pair — otherwise the audit is decoration:
   differ) vs a traced tau (byte-identical lowerings).
 * collective-matching: synthetic optimized HLO with correct vs
   wrong-shift ``source_target_pairs`` against ring(8).
+* telemetry-neutrality: a host-side (trace-time print/counter) hook
+  leaves the lowering byte-identical; a hook that inserts a traced op
+  (``jax.debug.print`` on a traced value — the violation class) moves
+  the fingerprint and must FAIL.
 
 The production artifact itself (8-node sparse superstep via
 ``RoundExecutor.lower_superstep``) runs in a subprocess with 8 forced
@@ -26,7 +30,8 @@ import pytest
 
 from repro.analysis.audits import (
     AuditResult, audit_collective_matching, audit_donation, audit_recompile,
-    expected_shift_pairs, hlo_fingerprint, parse_input_output_aliases)
+    audit_telemetry_neutrality, expected_shift_pairs, hlo_fingerprint,
+    parse_input_output_aliases)
 from repro.core.topology import fully_connected, ring
 
 jax.config.update("jax_platform_name", "cpu")
@@ -187,6 +192,90 @@ def test_audit_collective_matching_fully_connected_single_shift_set():
     assert good.ok, good.detail
 
 
+# ---------------------------------------------------------------------------
+# telemetry-neutrality audit: deliberate violation = a hook that traces
+# ---------------------------------------------------------------------------
+
+
+def test_audit_telemetry_neutrality_passes_for_host_side_hooks():
+    """A trace-time HOST hook (the Telemetry emit pattern: counter +
+    event append, no jax calls) leaves the lowering byte-identical."""
+    from repro.obs import Telemetry
+
+    tel = Telemetry()
+
+    def make_step(sink):
+        # same __name__ either way: the HLO module is named after the
+        # function, and the audit compares like-for-like builds.
+        def step(x, tau):
+            if sink is not None:
+                # host-side instrumentation, runs at trace time (the
+                # Telemetry emit pattern: counter + append, no jax calls)
+                sink.emit("compile", track="dispatch", count=1)
+            return jax.lax.fori_loop(0, tau, lambda _, v: v * 1.5, x)
+        return step
+
+    x = jnp.ones((16,))
+    bare = jax.jit(make_step(None)).lower(x, jnp.int32(2)).as_text()
+    inst = jax.jit(make_step(tel)).lower(x, jnp.int32(2)).as_text()
+    assert any(e["type"] == "compile" for e in tel.events)  # hook ran
+    res = audit_telemetry_neutrality(bare, inst)
+    assert res.ok, res.detail
+    fps = res.data["fingerprints"]
+    assert fps["bare"] == fps["instrumented"]
+
+
+def test_audit_telemetry_neutrality_fails_when_hook_traces():
+    """The violation class: instrumentation that inserts an op into the
+    traced graph (debug.print on a traced value) moves the HLO."""
+
+    def make_step(leaky):
+        # same __name__ either way, so the ONLY difference is the op.
+        def step(x, tau):
+            if leaky:
+                jax.debug.print("tau1={t}", t=tau)  # traced: in the HLO
+            return jax.lax.fori_loop(0, tau, lambda _, v: v * 1.5, x)
+        return step
+
+    x = jnp.ones((16,))
+    bare = jax.jit(make_step(False)).lower(x, jnp.int32(2)).as_text()
+    leaky = jax.jit(make_step(True)).lower(x, jnp.int32(2)).as_text()
+    res = audit_telemetry_neutrality(bare, leaky)
+    assert not res.ok
+    assert "CHANGED" in res.detail
+
+
+def test_audit_telemetry_neutrality_on_dense_executor_lowerings():
+    """The real surface, in-process on the dense engine: a RoundExecutor
+    with a live Telemetry sink lowers the SAME superstep HLO as one
+    without (the sparse production version runs via the CLI test)."""
+    from repro.core import DFLConfig, init_state
+    from repro.core.executor import RoundExecutor, stack_round_batches
+    from repro.obs import Telemetry
+    from repro.optim import sgd
+
+    def build(telemetry):
+        cfg = DFLConfig(tau1=2, tau2=1, topology=ring(4))
+        opt = sgd(0.1)
+
+        def loss_fn(p, b, k=None):
+            return jnp.mean((p["w"][None] - b) ** 2)
+
+        ex = RoundExecutor(cfg, loss_fn, opt, engine="dense",
+                           telemetry=telemetry)
+        state = init_state({"w": jnp.zeros((5,))}, 4, opt, jax.random.key(0))
+        batches = stack_round_batches(
+            [jax.random.normal(jax.random.key(1), (2, 4, 3, 5))] * 2, 2)
+        return ex.lower_superstep(state, batches, [[1, 1], [2, 0]])
+
+    tel = Telemetry()
+    bare = build(None).as_text()
+    inst = build(tel).as_text()
+    assert any(e["type"] == "compile" for e in tel.events)
+    res = audit_telemetry_neutrality(bare, inst)
+    assert res.ok, res.detail
+
+
 def test_audit_result_to_dict_roundtrips():
     r = AuditResult("x", True, "fine", {"k": 1})
     assert r.to_dict() == {"name": "x", "ok": True, "detail": "fine",
@@ -211,8 +300,13 @@ def test_production_audits_pass_via_cli(tmp_path):
     assert out.returncode == 0, out.stdout + out.stderr[-3000:]
     results = json.loads(out_json.read_text())
     assert {r["name"] for r in results} == {
-        "donation", "recompile", "collective-matching"}
+        "donation", "recompile", "collective-matching",
+        "telemetry-neutrality"}
     assert all(r["ok"] for r in results), results
     donation = next(r for r in results if r["name"] == "donation")
     # the whole DFLState carry: params, opt_state, rng, round_idx.
     assert donation["data"]["expected_params"] == 4
+    neutrality = next(r for r in results
+                      if r["name"] == "telemetry-neutrality")
+    fps = neutrality["data"]["fingerprints"]
+    assert fps["bare"] == fps["instrumented"]

@@ -55,5 +55,23 @@ def test_architecture_md_documents_every_shipped_rule_and_audit():
     section = text[start:]
     missing = [name for name in RULES if f"`{name}`" not in section]
     assert not missing, f"rules undocumented in ARCHITECTURE.md: {missing}"
-    for audit in ("donation", "recompile", "collective-matching"):
+    for audit in ("donation", "recompile", "collective-matching",
+                  "telemetry-neutrality"):
         assert f"`{audit}`" in section, f"audit {audit!r} undocumented"
+
+
+def test_architecture_md_documents_every_event_type():
+    """The Observability section must name every schema event type and
+    the CLI verbs: an undocumented event kind is a record nobody can
+    interpret from the docs."""
+    from repro.obs import EVENT_TYPES
+
+    text = open(os.path.join(ROOT, "docs", "ARCHITECTURE.md")).read()
+    start = text.find("## Observability")
+    assert start >= 0, "ARCHITECTURE.md lost its Observability section"
+    section = text[start:]
+    missing = [t for t in sorted(EVENT_TYPES) if f"`{t}`" not in section]
+    assert not missing, f"event types undocumented: {missing}"
+    for verb in ("validate", "trace export", "report"):
+        assert verb in section, f"obs CLI verb {verb!r} undocumented"
+    assert "--telemetry-out" in section and "--profile-dir" in section

@@ -371,6 +371,43 @@ def test_host_prefetcher_overlap_and_staleness():
     assert pf.pending_meta is None
 
 
+def test_host_prefetcher_failure_paths():
+    """Misuse is loud: double-schedule and take-without-schedule raise,
+    a worker exception surfaces on take() (and counts as an error), and
+    cancel()/mark_stale() keep the stats ledger honest."""
+    from repro.obs import Telemetry
+
+    tel = Telemetry()
+    pf = HostPrefetcher(telemetry=tel)
+
+    with pytest.raises(RuntimeError, match="nothing scheduled"):
+        pf.take()
+
+    pf.schedule(lambda: "ok", meta="a")
+    with pytest.raises(RuntimeError, match="previous prefetch not taken"):
+        pf.schedule(lambda: "ok2", meta="b")
+    assert pf.take() == ("ok", "a")
+
+    # worker exception: raised on take(), prefetcher stays usable after.
+    pf.schedule(lambda: 1 / 0, meta="boom")
+    with pytest.raises(ZeroDivisionError):
+        pf.take()
+    pf.schedule(lambda: "alive", meta="c")
+    assert pf.take() == ("alive", "c")
+
+    # cancel() after schedule joins the worker without surfacing results.
+    pf.schedule(lambda: "discarded", meta="d")
+    pf.cancel()
+    assert pf.pending_meta is None
+    pf.cancel()          # idempotent when nothing is pending
+    pf.mark_stale()
+
+    assert pf.stats == {"scheduled": 4, "taken": 2, "cancelled": 1,
+                        "stale": 1, "errors": 1}
+    types = [e["type"] for e in tel.events]
+    assert types.count("prefetch") >= 5   # 4 builds + cancel/stale instants
+
+
 def test_metrics_buffer_defers_and_amortizes():
     buf = MetricsBuffer()
     assert buf.flush() == []
@@ -379,7 +416,7 @@ def test_metrics_buffer_defers_and_amortizes():
     # the window opens at the FIRST chunk's pre-dispatch stamp: on the
     # pinned jaxlib the CPU client executes inside dispatch, so a
     # push-time origin would measure ~zero wall-clock per round.
-    buf.push(10, 2, 4, 1, m1, dispatched_at=time.time() - 0.3)
+    buf.push(10, 2, 4, 1, m1, dispatched_at=time.perf_counter() - 0.3)
     buf.push(12, 1, 2, 2, m2)
     assert buf.pending_rounds == 3
     rows = buf.flush()
@@ -397,7 +434,7 @@ def test_metrics_buffer_uses_metric_carried_taus():
     buf = MetricsBuffer()
     m = {"loss": jnp.asarray([1.0, 2.0, 3.0]),
          "tau1": jnp.asarray([2, 3, 1]), "tau2": jnp.asarray([1, 0, 2])}
-    buf.push(5, 3, None, None, m, dispatched_at=time.time())
+    buf.push(5, 3, None, None, m, dispatched_at=time.perf_counter())
     rows = buf.flush()
     assert [(r["tau1"], r["tau2"]) for r in rows] == [(2, 1), (3, 0), (1, 2)]
     assert all(isinstance(r["tau1"], int) for r in rows)

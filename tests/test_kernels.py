@@ -263,30 +263,48 @@ def test_fused_choco_fewer_buffer_passes():
     un-jitted wrapper bodies, where the counters tick per call)."""
     x, y, my, noise = _fused_inputs((3, 5, 7), jnp.float32)
 
-    ops.reset_op_stats()
-    ops.eager_impl("choco_qsgd_move")(x, y, my, 0.5, noise, levels=16,
-                                      interpret=True)
-    fused = ops.op_stats()
-    ops.reset_op_stats()
-    _, d = ops.eager_impl("choco_move")(x, y, my, 0.5, interpret=True)
-    ops.eager_impl("qsgd_quantize")(d, noise, levels=16, interpret=True)
-    unfused = ops.op_stats()
-    assert fused["pallas_calls"] < unfused["pallas_calls"], (fused, unfused)
-    assert fused["pad_roundtrips"] < unfused["pad_roundtrips"], (fused,
-                                                                 unfused)
+    with ops.op_stats_delta() as fused:
+        ops.eager_impl("choco_qsgd_move")(x, y, my, 0.5, noise, levels=16,
+                                          interpret=True)
+    with ops.op_stats_delta() as unfused:
+        _, d = ops.eager_impl("choco_move")(x, y, my, 0.5, interpret=True)
+        ops.eager_impl("qsgd_quantize")(d, noise, levels=16, interpret=True)
+    assert fused["pallas_calls"] < unfused["pallas_calls"], (
+        fused.as_dict(), unfused.as_dict())
+    assert fused["pad_roundtrips"] < unfused["pad_roundtrips"], (
+        fused.as_dict(), unfused.as_dict())
 
-    ops.reset_op_stats()
-    ops.eager_impl("choco_topk_move")(x, y, my, 0.5, k=26,
-                                      tmode="interpret", interpret=True)
-    fused = ops.op_stats()
-    ops.reset_op_stats()
-    _, d = ops.eager_impl("choco_move")(x, y, my, 0.5, interpret=True)
-    ops.eager_impl("top_k_compress")(d, k=26, tmode="interpret", imask=True)
-    unfused = ops.op_stats()
-    assert fused["pallas_calls"] < unfused["pallas_calls"], (fused, unfused)
-    assert fused["pad_roundtrips"] < unfused["pad_roundtrips"], (fused,
-                                                                 unfused)
-    ops.reset_op_stats()
+    with ops.op_stats_delta() as fused:
+        ops.eager_impl("choco_topk_move")(x, y, my, 0.5, k=26,
+                                          tmode="interpret", interpret=True)
+    with ops.op_stats_delta() as unfused:
+        _, d = ops.eager_impl("choco_move")(x, y, my, 0.5, interpret=True)
+        ops.eager_impl("top_k_compress")(d, k=26, tmode="interpret",
+                                         imask=True)
+    assert fused["pallas_calls"] < unfused["pallas_calls"], (
+        fused.as_dict(), unfused.as_dict())
+    assert fused["pad_roundtrips"] < unfused["pad_roundtrips"], (
+        fused.as_dict(), unfused.as_dict())
+
+
+def test_op_stats_delta_scoping_and_reset_deprecation():
+    """Snapshot/delta attribution: nested scopes each see their own
+    window, reading an open scope raises, and the old global
+    ``reset_op_stats`` warns (it races concurrent scopes)."""
+    x, y, my, _noise = _fused_inputs((2, 3), jnp.float32)
+    with ops.op_stats_delta() as outer:
+        ops.eager_impl("choco_move")(x, y, my, 0.5, interpret=True)
+        with pytest.raises(RuntimeError, match="still open"):
+            outer.as_dict()
+        with ops.op_stats_delta() as inner:
+            ops.eager_impl("choco_move")(x, y, my, 0.5, interpret=True)
+    # choco_move pads x, y, mixed_y: 3 round-trips, 1 launch per call.
+    assert inner.as_dict() == {"pad_roundtrips": 3, "pallas_calls": 1}
+    assert outer.pad_roundtrips == 6 and outer.pallas_calls == 2
+    before = ops.op_stats()
+    with pytest.warns(DeprecationWarning, match="op_stats_delta"):
+        ops.reset_op_stats()
+    assert ops.op_stats() == {k: 0 for k in before}
 
 
 # ---------------------------------------------------------------------------
