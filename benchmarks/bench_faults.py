@@ -1,0 +1,264 @@
+"""Sporadic participation vs. synchronous blocking under injected
+faults, at equal deployment-clock budget — the fault-masking payoff.
+
+The deployment is the 8-node ring quadratic testbed with a
+deterministic ``repro.faults.FaultPlan``: a node crash window and a
+link-outage window (plus their composition). Two policies ride the SAME
+fault timeline and the SAME wall-clock budget:
+
+  * ``blocking`` — the classic synchronous round: every node, every
+    edge, every round. During a fault window the round still waits on
+    the dead peer/link, so gossip is priced through the
+    ``edge_outage`` residual tariff (~1/residual slower) — the clock
+    burns while the model barely moves.
+  * ``sporadic`` — the participation engine: faulted nodes skip local
+    SGD, faulted edges fold their mixing weight onto the diagonal
+    (``FaultPlan.masks`` -> widened ``[K, 2+N+E]`` schedule rows), and
+    the round is priced by ``CostModel.masked_round_cost`` over the
+    surviving sets only — degraded rounds stay cheap and keep learning.
+
+Both policies execute FOR REAL on ONE participation-enabled
+``RoundExecutor`` (the blocking run is the all-ones mask trajectory),
+so the whole bench shares one compiled executable per superstep shape:
+``recompiles_after_warmup == 0`` is asserted. The headline (asserted
+under ``--check``, the CI config): at equal budget the sporadic run's
+measured loss beats the blocking run's.
+
+The measured loss is the mean per-node global loss gap
+mean_i F(x_i) - F* = 0.5 mean_i ||x_i - tbar||^2 (charges both
+average-model error and residual consensus drift). One shared learning
+rate and one shared (tau1, tau2) keep the comparison purely about the
+participation policy.
+
+Writes ``BENCH_faults.json`` at the repo root. ``--smoke`` drops to
+2 seeds (the CI config).
+
+    PYTHONPATH=src python -m benchmarks.bench_faults --smoke --check
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DFLConfig, RoundExecutor, init_state, ring
+from repro.faults import FaultPlan, LinkOutage, NodeCrash
+from repro.optim import sgd
+from repro.planner import (ComputeModel, CostModel, LinkModel,
+                           WirelessLinks, edge_outage)
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_faults.json")
+
+N = 8
+DIM = 16
+SIGMA = 0.5            # sampling-noise sigma (gradient = w - t_i - noise)
+TSCALE = 0.8           # non-IID target spread
+ETA = 0.008            # one shared lr: the comparison is about the policy
+TAU1, TAU2 = 2, 1      # one shared schedule, likewise
+T_GOSSIP = 1.0         # base gossip step cost (compute step = 1 unit)
+RESIDUAL = 1e-2        # dead-link tariff: blocking gossip ~100x slower
+BUDGET = 300.0
+SUPERSTEP = 10
+MAX_ROUNDS = 2000
+
+# the fault timeline, in rounds (1 nominal round = TAU1 + TAU2*T_GOSSIP
+# = 3 deployment-clock units): a mid-run crash, then a link outage.
+CRASH = NodeCrash(node=3, r_start=5, r_stop=25)
+OUTAGE = LinkOutage(edges=((0, 1), (4, 5)), r_start=40, r_stop=70)
+SEC_PER_ROUND = float(TAU1 + TAU2 * T_GOSSIP)
+
+
+def build_testbed() -> Tuple[CostModel, FaultPlan]:
+    topo = ring(N)
+    model_bits = 32.0 * DIM
+    copy_bytes = model_bits / 8.0
+    base_link = WirelessLinks(
+        default=LinkModel(bytes_per_s=copy_bytes / T_GOSSIP))
+    base = CostModel(compute=ComputeModel(step_flops=1.0, flops_per_s=1.0),
+                     link=base_link, topology=topo, model_bits=model_bits)
+    plan = FaultPlan(topo, (CRASH, OUTAGE), seed=0)
+    return base, plan
+
+
+def active_sets(topo, node_mask: np.ndarray, edge_mask: np.ndarray):
+    nodes = [i for i in range(topo.num_nodes) if node_mask[i]]
+    edges = [e for e, m in zip(topo.edges(), edge_mask) if m]
+    return nodes, edges
+
+
+def blocking_schedule(base: CostModel, plan: FaultPlan,
+                      budget: float) -> Tuple[int, float]:
+    """Rounds the synchronous policy affords: any masked edge at the
+    round's nominal fault index drags the WHOLE round through the
+    outage tariff (the synchronous gossip blocks on its slowest link)."""
+    topo = base.topology
+    clock, rounds = 0.0, 0
+    while rounds < MAX_ROUNDS:
+        # fault windows are defined on the nominal (non-blocked) round
+        # clock — a wall-clock outage does not end early just because
+        # the blocked run made no progress through it.
+        r_nominal = int(clock // SEC_PER_ROUND)
+        _, em = plan.masks(r_nominal)
+        down = [e for e, m in zip(topo.edges(), em) if not m]
+        if down:
+            link = edge_outage(base.link, down, residual=RESIDUAL)
+            cm = CostModel(compute=base.compute, link=link,
+                           topology=topo, model_bits=base.model_bits,
+                           engine=base.engine)
+            rc = cm.round_cost(TAU1, TAU2)
+        else:
+            rc = base.round_cost(TAU1, TAU2)
+        if clock + rc.time_s > budget:
+            break
+        clock += rc.time_s
+        rounds += 1
+    return rounds, clock
+
+
+def sporadic_schedule(base: CostModel, plan: FaultPlan, budget: float
+                      ) -> Tuple[np.ndarray, float]:
+    """Masked rounds the sporadic policy affords: each round priced by
+    ``masked_round_cost`` over the surviving node/edge sets only.
+    Returns the realized ``[K, 2+N+E]`` trajectory and the clock."""
+    topo = base.topology
+    clock, rows = 0.0, []
+    while len(rows) < MAX_ROUNDS:
+        r_nominal = int(clock // SEC_PER_ROUND)
+        nm, em = plan.masks(r_nominal)
+        nodes, edges = active_sets(topo, nm, em)
+        rc = base.masked_round_cost(TAU1, TAU2, active_nodes=nodes,
+                                    active_edges=edges)
+        if clock + rc.time_s > budget:
+            break
+        clock += rc.time_s
+        rows.append(np.concatenate(
+            [np.array([TAU1, TAU2], np.int32), nm, em]))
+    return np.asarray(rows, np.int32), clock
+
+
+def run_trajectory(executor: RoundExecutor, rows: np.ndarray,
+                   targets: np.ndarray, seed: int) -> float:
+    """Execute the (possibly masked) trajectory and return the final
+    mean per-node global loss gap."""
+    rng = np.random.default_rng(seed)
+    state = init_state({"w": jnp.zeros((DIM,))}, N, sgd(ETA),
+                       jax.random.key(seed))
+    r = 0
+    while r < len(rows):
+        k = min(SUPERSTEP, len(rows) - r)
+        noise = rng.normal(size=(k, TAU1, N, DIM)) * (SIGMA / np.sqrt(DIM))
+        batches = jnp.asarray(targets[None, None] + noise, jnp.float32)
+        state, _ = executor.dispatch_trajectory(state, batches,
+                                                rows[r:r + k])
+        r += k
+    x = np.asarray(state.params["w"])
+    tbar = targets.mean(0)
+    return 0.5 * float(np.mean(np.sum((x - tbar) ** 2, axis=1)))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", type=int, default=6)
+    ap.add_argument("--smoke", action="store_true",
+                    help="2 seeds (the CI config)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert sporadic beats blocking at equal budget")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+    seeds = 2 if args.smoke else args.seeds
+
+    base, plan = build_testbed()
+    topo = base.topology
+    targets = np.random.default_rng(0).normal(size=(N, DIM)) * TSCALE
+    opt = sgd(ETA)
+
+    def quad_loss(p, b, k=None):
+        return 0.5 * jnp.sum((p["w"] - b) ** 2)
+
+    executor = RoundExecutor(
+        DFLConfig(tau1=TAU1, tau2=TAU2, topology=topo),
+        quad_loss, opt, participation=True)
+
+    # -- price both policies on the same clock ------------------------------
+    blk_rounds, blk_clock = blocking_schedule(base, plan, BUDGET)
+    spo_rows, spo_clock = sporadic_schedule(base, plan, BUDGET)
+    blk_rows = np.concatenate(
+        [np.tile(np.array([[TAU1, TAU2]], np.int32), (blk_rounds, 1)),
+         np.ones((blk_rounds, N + topo.num_edges), np.int32)], axis=1)
+    degraded = int(sum(
+        1 for row in spo_rows
+        if row[2:2 + N].sum() < N or row[2 + N:].sum() < topo.num_edges))
+    print(f"blocking: rounds={blk_rounds} priced_time={blk_clock:.1f}")
+    print(f"sporadic: rounds={len(spo_rows)} priced_time={spo_clock:.1f} "
+          f"degraded={degraded}")
+
+    # -- warm every superstep shape, then measure ---------------------------
+    lengths = {blk_rounds, len(spo_rows)}
+    shapes = {min(SUPERSTEP, n) for n in lengths if n} | \
+             {n % SUPERSTEP for n in lengths if n % SUPERSTEP}
+    dummy_state = init_state({"w": jnp.zeros((DIM,))}, N, opt,
+                             jax.random.key(0))
+    for k in sorted(shapes, reverse=True):
+        executor.warmup(dummy_state, jnp.zeros((k, TAU1, N, DIM)))
+    warm_compiles = executor.compile_count
+
+    results: Dict[str, dict] = {}
+    for name, rows, clock in (("blocking", blk_rows, blk_clock),
+                              ("sporadic", spo_rows, spo_clock)):
+        losses = [run_trajectory(executor, rows, targets, s)
+                  for s in range(seeds)]
+        results[name] = {
+            "rounds": len(rows), "priced_time": clock,
+            "loss": float(np.mean(losses)),
+            "loss_per_seed": [float(v) for v in losses],
+        }
+        print(f"{name}: loss={np.mean(losses):.4f}")
+
+    blk_loss = results["blocking"]["loss"]
+    spo_loss = results["sporadic"]["loss"]
+    recompiles = executor.compile_count - warm_compiles
+    verdict = ("WINS %.2fx" % (blk_loss / spo_loss)
+               if spo_loss < blk_loss else "LOSES")
+    print(f"sporadic {verdict} vs blocking at budget={BUDGET} | "
+          f"recompiles after warmup: {recompiles}")
+
+    # THE zero-recompile property: the all-ones blocking run and every
+    # masked sporadic round reused the warmed executables.
+    assert recompiles == 0, (
+        f"{recompiles} recompiles after warmup across the bench")
+
+    payload = {
+        "config": {
+            "nodes": N, "dim": DIM, "sigma": SIGMA, "target_scale": TSCALE,
+            "eta": ETA, "tau1": TAU1, "tau2": TAU2, "t_gossip": T_GOSSIP,
+            "residual": RESIDUAL, "budget": BUDGET,
+            "superstep": SUPERSTEP, "seeds": seeds, "smoke": args.smoke,
+            "faults": plan.to_spec(),
+            "backend": jax.default_backend(),
+        },
+        "blocking": results["blocking"],
+        "sporadic": {**results["sporadic"], "degraded_rounds": degraded},
+        "sporadic_beats_blocking": spo_loss < blk_loss,
+        "margin_x": blk_loss / spo_loss if spo_loss > 0 else float("inf"),
+        "recompiles_after_warmup": recompiles,
+        "compile_count_warmup": warm_compiles,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {args.out}")
+    if args.check:
+        assert spo_loss < blk_loss, (
+            f"sporadic loss {spo_loss:.4f} does not beat blocking "
+            f"{blk_loss:.4f} at equal budget")
+        print("check OK: sporadic participation beats synchronous "
+              "blocking at equal deployment-clock budget, zero recompiles")
+
+
+if __name__ == "__main__":
+    main()

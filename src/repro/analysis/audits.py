@@ -30,9 +30,15 @@ optimized module of the production superstep
 
 ``run_production_audits()`` builds a real 8-node ring sparse superstep
 (needs 8 devices — ``python -m repro.analysis audit`` forces 8 host
-devices; tests do the same in a subprocess) and runs all four. The
-individual ``audit_*`` functions are pure text analysis, testable on
-synthetic HLO and deliberately-broken fixtures.
+devices; tests do the same in a subprocess) and runs all four, plus two
+participation variants on the widened ``[K, 2+N+E]`` executor:
+**participation-recompile** (all-ones vs crash vs sporadic mask
+trajectories share one fingerprint — masks are schedule data, never
+trace constants) and **participation-collectives** (the masked
+executable still ships the full shift pair set — masks gate mixing
+weights, not collectives). The individual ``audit_*`` functions are
+pure text analysis, testable on synthetic HLO and deliberately-broken
+fixtures.
 """
 from __future__ import annotations
 
@@ -241,7 +247,7 @@ def audit_telemetry_neutrality(bare_text: str, instrumented_text: str,
 
 def build_audit_executor(num_nodes: int = 8, *, tau1_max: int = 3,
                          tau2_max: int = 2, rounds: int = 2, dim: int = 33,
-                         telemetry=None):
+                         telemetry=None, participation: bool = False):
     """A small but REAL sparse-engine superstep: ring(N) topology, node
     axis manual over an N-device mesh, dynamic taus, donated carry — the
     exact executable class ``launch.train`` dispatches. Returns
@@ -271,7 +277,7 @@ def build_audit_executor(num_nodes: int = 8, *, tau1_max: int = 3,
 
     ex = RoundExecutor(cfg, loss_fn, opt, engine="sparse", mesh=mesh,
                        node_axes=("data",), dynamic=True, donate=True,
-                       telemetry=telemetry)
+                       telemetry=telemetry, participation=participation)
     state = init_state({"w": jnp.zeros((dim,))}, num_nodes, opt,
                        jax.random.key(0))
     sh = NamedSharding(mesh, P("data"))
@@ -310,10 +316,40 @@ def run_production_audits(num_nodes: int = 8) -> List[AuditResult]:
     assert any(e["type"] == "compile" for e in tel.events), (
         "instrumented audit lowering never ran its telemetry hooks — "
         "the neutrality comparison would be vacuous")
+
+    # Participation: masked trajectories are schedule DATA on the widened
+    # [K, 2+N+E] rows — lowering an all-ones trajectory and two distinct
+    # fault patterns must produce one fingerprint (masks never reach the
+    # trace as constants), and the masked executable must still ship the
+    # full shift pair set (masks gate mixing WEIGHTS, not collectives —
+    # dropping a ppermute per masked edge would recompile per pattern).
+    import numpy as np
+
+    from repro.faults import FaultPlan, NodeCrash, SporadicParticipation
+
+    ex_p, state_p, batches_p, _ = build_audit_executor(
+        num_nodes, participation=True)
+    taus = np.array([[1, 1], [2, 1]], np.int32)
+    all_on = np.concatenate(
+        [taus, np.ones((2, ex_p.row_width - 2), np.int32)], axis=1)
+    crash = FaultPlan(topo, (NodeCrash(3, 0, 8),), seed=0)
+    sporadic = FaultPlan(
+        topo, (SporadicParticipation(0.6, 0.5, 0, 8),), seed=7)
+    low_on = ex_p.lower_superstep(state_p, batches_p, all_on)
+    low_crash = ex_p.lower_superstep(state_p, batches_p,
+                                     crash.mask_trajectory(taus))
+    low_spor = ex_p.lower_superstep(state_p, batches_p,
+                                    sporadic.mask_trajectory(taus))
     return [
         audit_donation(compiled_text, leaf_names),
         audit_recompile([low_a.as_text(), low_b.as_text()],
                         labels=["taus=[[1,1],[1,1]]", "taus=[[3,0],[2,2]]"]),
         audit_collective_matching(compiled_text, topo),
         audit_telemetry_neutrality(low_a.as_text(), low_inst.as_text()),
+        audit_recompile(
+            [low_on.as_text(), low_crash.as_text(), low_spor.as_text()],
+            labels=["all-ones", "crash(node=3)", "sporadic(p=0.6/0.5)"],
+            name="participation-recompile"),
+        audit_collective_matching(low_crash.compile().as_text(), topo,
+                                  name="participation-collectives"),
     ]

@@ -3,13 +3,23 @@
 Leaves are flattened to a single .npz (keyed by the joined tree path); a
 sidecar manifest.json records step, metrics and the treedef os the pytree
 can be restored into the same structure.
+
+Crash safety: writes are ATOMIC (temp file in the same directory +
+``os.replace``), so a run killed mid-save never leaves a truncated
+``ckpt_*.npz`` under the canonical name; and restore is DEFENSIVE — with
+``step=None`` it walks the available steps newest-first and falls back
+past any checkpoint that fails to load or validate (a torn file from a
+pre-atomic writer, a partial copy, bit rot), so a fault-injected run
+resumes from the newest checkpoint that is actually intact.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
-from typing import Any, Dict, Optional, Tuple
+import tempfile
+import zipfile
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -31,53 +41,114 @@ def _key_of(path) -> str:
     return "/".join(parts)
 
 
+def _atomic_write(path: str, write_fn) -> None:
+    """Write via a temp file in the SAME directory, fsync, os.replace —
+    the canonical name only ever points at a complete file."""
+    d = os.path.dirname(path) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
 def save_checkpoint(directory: str, step: int, tree: PyTree,
                     metrics: Optional[Dict] = None) -> str:
     os.makedirs(directory, exist_ok=True)
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     arrays = {_key_of(p): np.asarray(v) for p, v in flat}
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    np.savez(path, **arrays)
+    _atomic_write(path, lambda f: np.savez(f, **arrays))
     manifest = {
         "step": step,
         "metrics": metrics or {},
         "num_leaves": len(arrays),
     }
-    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
-        json.dump(manifest, f, indent=2)
+    _atomic_write(
+        os.path.join(directory, f"ckpt_{step:08d}.json"),
+        lambda f: f.write(json.dumps(manifest, indent=2).encode("utf-8")))
     return path
 
 
-def latest_step(directory: str) -> Optional[int]:
+def available_steps(directory: str) -> List[int]:
+    """All checkpoint steps present in ``directory``, ascending."""
     if not os.path.isdir(directory):
-        return None
-    steps = [
+        return []
+    return sorted(
         int(m.group(1))
         for fn in os.listdir(directory)
-        if (m := re.match(r"ckpt_(\d+)\.npz$", fn))
-    ]
+        if (m := re.match(r"ckpt_(\d+)\.npz$", fn)))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = available_steps(directory)
     return max(steps) if steps else None
+
+
+# what a torn/corrupt .npz (or a manifest mismatch) surfaces as across
+# numpy versions: BadZipFile for truncated archives, ValueError/KeyError/
+# EOFError/OSError for header damage and short reads.
+_CORRUPT_ERRORS = (zipfile.BadZipFile, ValueError, KeyError, EOFError,
+                   OSError)
+
+
+class ShapeMismatchError(ValueError):
+    """Checkpoint/template structural disagreement — caller error (the
+    model changed), not data damage; the newest-first fallback never
+    skips past it."""
+
+
+def _load_step(directory: str, step: int, template: PyTree) -> PyTree:
+    with np.load(os.path.join(directory, f"ckpt_{step:08d}.npz")) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for path, tmpl in flat:
+            key = _key_of(path)
+            arr = data[key]
+            if (hasattr(tmpl, "shape")
+                    and tuple(arr.shape) != tuple(tmpl.shape)):
+                raise ShapeMismatchError(
+                    f"{key}: checkpoint shape {arr.shape} != "
+                    f"template {tmpl.shape}")
+            if arr.dtype.kind == "V" and hasattr(tmpl, "dtype"):
+                # ml_dtypes leaves (bfloat16 & co) come back from .npz as
+                # raw void bytes; reinterpret via the template's dtype.
+                arr = arr.view(tmpl.dtype)
+            leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 def restore_checkpoint(directory: str, template: PyTree,
                        step: Optional[int] = None) -> Tuple[PyTree, int]:
-    """Restore into the structure of ``template`` (shapes are validated)."""
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {directory}")
-    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
-    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
-    leaves = []
-    for path, tmpl in flat:
-        key = _key_of(path)
-        arr = data[key]
-        if hasattr(tmpl, "shape") and tuple(arr.shape) != tuple(tmpl.shape):
-            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
-                             f"template {tmpl.shape}")
-        if arr.dtype.kind == "V" and hasattr(tmpl, "dtype"):
-            # ml_dtypes leaves (bfloat16 & co) come back from .npz as raw
-            # void bytes; reinterpret via the template's dtype.
-            arr = arr.view(tmpl.dtype)
-        leaves.append(arr)
-    return jax.tree_util.tree_unflatten(treedef, leaves), step
+    """Restore into the structure of ``template`` (shapes are validated).
+
+    ``step=None`` restores the newest VALID checkpoint: steps are tried
+    newest-first and unreadable/corrupt ones are skipped (an explicit
+    ``step`` is trusted and raises on damage — the caller asked for that
+    exact file). Raises FileNotFoundError when the directory holds no
+    loadable checkpoint at all.
+    """
+    if step is not None:
+        return _load_step(directory, step, template), step
+    steps = available_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    failures: List[str] = []
+    for s in reversed(steps):
+        try:
+            return _load_step(directory, s, template), s
+        except ShapeMismatchError:
+            raise  # wrong template, not a torn file — older ckpts won't fit
+        except _CORRUPT_ERRORS as e:
+            failures.append(f"step {s}: {type(e).__name__}: {e}")
+    raise FileNotFoundError(
+        f"no loadable checkpoint in {directory}; "
+        f"tried {len(failures)} (newest first): " + "; ".join(failures))

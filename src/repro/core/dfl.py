@@ -189,7 +189,7 @@ def init_state(
 def _local_updates(
     cfg: DFLConfig, loss_fn: LossFn, opt, sub: NodeSubstrate,
     params: PyTree, opt_state: PyTree, local_key: jax.Array, batches: PyTree,
-    constrain, tau1=None,
+    constrain, tau1=None, node_mask=None,
 ) -> Tuple[PyTree, PyTree, jnp.ndarray]:
     """tau1 per-node SGD steps (Alg. 1 l.4), engine-agnostic.
 
@@ -207,8 +207,16 @@ def _local_updates(
     ``fori_loop`` with a dynamic trip count, so re-planning tau1 never
     retraces. ``None`` keeps the static ``scan`` (bit-identical legacy
     path).
+
+    ``node_mask``: optional traced 0/1 participation mask in the
+    substrate's LOCAL view (``sub.node_mask_local``). The update loop runs
+    unconditionally — participation gates which nodes KEEP their result
+    (``sub.select_nodes``), so the compiled program is mask-independent
+    and the all-ones round is a bitwise select of the plain one. The loss
+    metric averages over active nodes only.
     """
     grad_one = jax.value_and_grad(loss_fn)
+    params0, opt_state0 = params, opt_state
 
     def step(carry, inp):
         params, opt_state = carry
@@ -222,11 +230,18 @@ def _local_updates(
         params = constrain(params)
         return (params, opt_state), losses
 
+    def finish(params, opt_state, per_node_loss):
+        if node_mask is None:
+            return params, opt_state, sub.mean_over_nodes(per_node_loss)
+        params = sub.select_nodes(node_mask, params, params0)
+        opt_state = sub.select_nodes(node_mask, opt_state, opt_state0)
+        return params, opt_state, sub.masked_mean_over_nodes(
+            per_node_loss, node_mask)
+
     if tau1 is None:
         (params, opt_state), losses = jax.lax.scan(
             step, (params, opt_state), (batches, jnp.arange(cfg.tau1)))
-        mean_loss = sub.mean_over_nodes(jnp.mean(losses, axis=0))
-        return params, opt_state, mean_loss
+        return finish(params, opt_state, jnp.mean(losses, axis=0))
 
     def batch_at(t):
         return jax.tree_util.tree_map(
@@ -248,19 +263,21 @@ def _local_updates(
 
     (params, opt_state), loss_sum = jax.lax.fori_loop(
         1, tau1, body, (carry, loss_sum))
-    mean_loss = sub.mean_over_nodes(
-        loss_sum / tau1.astype(loss_sum.dtype))
-    return params, opt_state, mean_loss
+    return finish(params, opt_state, loss_sum / tau1.astype(loss_sum.dtype))
 
 
 def _communicate_plain(cfg: DFLConfig, sub: NodeSubstrate, params: PyTree,
-                       round_idx=None, tau2=None) -> PyTree:
+                       round_idx=None, tau2=None, edge_mask=None) -> PyTree:
     """tau2 uncompressed gossip steps (optionally round-varying topology).
 
     ``tau2``: optional TRACED int32 gossip count (dynamic-tau executor); the
     ``fori_loop`` trip count is then a device scalar bounded by cfg.tau2
     (the compiled maximum), so schedule changes never retrace. ``None``
     keeps the static legacy path.
+
+    ``edge_mask``: optional traced [E] 0/1 participation mask over
+    ``cfg.topology.edges()`` — masked edges gossip identity and their
+    weight renormalizes onto the endpoints' self loops (``sub.mix``).
     """
     if tau2 is None and cfg.tau2 == 0:
         return params
@@ -269,6 +286,9 @@ def _communicate_plain(cfg: DFLConfig, sub: NodeSubstrate, params: PyTree,
     if cfg.topology_schedule:
         assert dense and cfg.mixing_impl == "dense", (
             "topology schedules use the dense engine's dense mixing")
+        assert edge_mask is None, (
+            "participation masks are indexed against cfg.topology.edges(); "
+            "a round-varying topology schedule has no stable edge list")
         branches = [
             (lambda p, t=t: jax.lax.fori_loop(
                 0, t2, lambda _, q: mixing_lib.mix_dense(q, t), p))
@@ -282,15 +302,19 @@ def _communicate_plain(cfg: DFLConfig, sub: NodeSubstrate, params: PyTree,
         assert tau2 is None, (
             "dense_power collapses tau2 into C^tau2 at trace time; dynamic "
             "taus need iterated mixing (mixing_impl='dense')")
+        assert edge_mask is None, (
+            "dense_power bakes C^tau2 in at trace time; masked gossip "
+            "needs iterated mixing (mixing_impl='dense')")
         return mixing_lib.mix_dense_power(params, cfg.topology, cfg.tau2)
     if cfg.mixing_impl != "dense":
         raise ValueError(f"unknown mixing_impl {cfg.mixing_impl!r}")
-    return jax.lax.fori_loop(0, t2, lambda _, p: sub.mix(p), params)
+    return jax.lax.fori_loop(
+        0, t2, lambda _, p: sub.mix(p, edge_mask=edge_mask), params)
 
 
 def _communicate_choco(
     cfg: DFLConfig, params: PyTree, hat: PyTree, rng: jax.Array,
-    sub: Optional[NodeSubstrate] = None, tau2=None,
+    sub: Optional[NodeSubstrate] = None, tau2=None, edge_mask=None,
 ) -> Tuple[PyTree, PyTree]:
     """tau2 CHOCO-G compressed gossip steps (Alg. 2 lines 6-11), shared by
     both engines: Y is mixed by ``sub.mix`` (dense einsum / ppermute), then
@@ -309,7 +333,7 @@ def _communicate_choco(
 
     def one_step(carry, t):
         x, y = carry
-        mixed_y = sub.mix(y)
+        mixed_y = sub.mix(y, edge_mask=edge_mask)
         keys = sub.node_keys(jax.random.fold_in(rng, t))
         return sub.choco_step(comp, x, y, mixed_y, cfg.gamma, keys)
 
@@ -336,6 +360,7 @@ def round_body(
     params: PyTree, opt_state: PyTree, hat: Optional[PyTree],
     rng: jax.Array, round_idx, batches: PyTree, constrain=None,
     taus: Optional[Tuple[jax.Array, jax.Array]] = None,
+    masks: Optional[Tuple[jax.Array, jax.Array]] = None,
 ) -> Tuple[PyTree, PyTree, Optional[PyTree], dict]:
     """One full DFL/C-DFL round on either substrate: the single shared
     implementation both engines execute.
@@ -346,19 +371,35 @@ def round_body(
     the step counts actually run, so an adaptive re-plan changes them
     without retracing. RNG folding and per-step arithmetic are identical to
     the static path (bit-for-bit, tested in tests/test_executor.py).
+
+    ``masks``: optional ``(node_mask [N], edge_mask [E])`` TRACED 0/1 int32
+    vectors (REPLICATED on the sparse engine) — the sporadic-participation
+    path. Masked nodes skip their local updates (keep params/opt slots,
+    still gossip); masked edges gossip identity with the lost weight
+    renormalized onto both endpoints' self loops, so the effective W stays
+    doubly stochastic. The compiled program is mask-independent (masks
+    gate selects and accumulation weights, never control flow), and the
+    all-ones round is bitwise the unmasked one (tests/test_faults.py).
+    RNG folding is untouched by masks.
     """
     constrain = constrain or (lambda t: t)
     tau1, tau2 = taus if taus is not None else (None, None)
+    if masks is not None:
+        node_mask, edge_mask = masks
+        mask_local = sub.node_mask_local(node_mask)
+    else:
+        mask_local = edge_mask = None
     local_key, comm_key = round_keys(rng, round_idx)
     params, opt_state, mean_loss = _local_updates(
         cfg, loss_fn, opt, sub, params, opt_state, local_key, batches,
-        constrain, tau1=tau1)
+        constrain, tau1=tau1, node_mask=mask_local)
     if cfg.is_compressed:
         assert hat is not None, "C-DFL needs init_state(..., compressed=True)"
         params, hat = _communicate_choco(cfg, params, hat, comm_key, sub,
-                                         tau2=tau2)
+                                         tau2=tau2, edge_mask=edge_mask)
     else:
-        params = _communicate_plain(cfg, sub, params, round_idx, tau2=tau2)
+        params = _communicate_plain(cfg, sub, params, round_idx, tau2=tau2,
+                                    edge_mask=edge_mask)
         params = constrain(params)
     metrics = {
         "loss": mean_loss,
@@ -371,6 +412,7 @@ def make_round_fn(
     cfg: DFLConfig, loss_fn: LossFn, opt, constrain=None, *,
     engine: str = "dense", mesh=None, node_axes: Sequence[str] = ("data",),
     use_kernels: bool = False, dynamic_taus: bool = False,
+    participation: bool = False,
 ) -> Callable[..., Tuple[DFLState, dict]]:
     """Build the jittable one-round function for either engine.
 
@@ -397,11 +439,27 @@ def make_round_fn(
     [cfg.tau1, ...] leading dims, only the first tau1 slices are read).
     One compile covers every (tau1, tau2) <= the maxima — the
     recompile-free hot path behind ``repro.core.executor``.
+
+    ``participation``: the returned function is
+    round_fn(state, batches, tau1, tau2, node_mask, edge_mask) with traced
+    0/1 int32 masks ([N] over nodes, [E] over ``topology.edges()``) — the
+    sporadic round semantic of ``round_body(..., masks=...)``. Requires
+    ``dynamic_taus`` (masks ride the same schedule-as-data path) and plain
+    per-step mixing (no dense_power / topology_schedule).
     """
     if dynamic_taus and cfg.mixing_impl == "dense_power":
         raise ValueError(
             "dynamic taus need iterated mixing: dense_power bakes C^tau2 in "
             "at trace time (use mixing_impl='dense')")
+    if participation:
+        if not dynamic_taus:
+            raise ValueError(
+                "participation masks ride the dynamic schedule-as-data "
+                "path; pass dynamic_taus=True")
+        if cfg.topology_schedule:
+            raise ValueError(
+                "participation masks index cfg.topology.edges(); a "
+                "round-varying topology schedule has no stable edge list")
     if engine == "auto":
         engine = "sparse" if sparse_engine_eligible(
             cfg, mesh, node_axes) else "dense"
@@ -413,22 +471,31 @@ def make_round_fn(
                                      node_axes=node_axes,
                                      use_kernels=use_kernels,
                                      dynamic_taus=dynamic_taus,
+                                     participation=participation,
                                      constrain=constrain)
     if engine != "dense":
         raise ValueError(f"unknown engine {engine!r}")
     sub = DenseSubstrate(cfg.topology)
 
-    def body(state: DFLState, batches: PyTree, taus):
+    def body(state: DFLState, batches: PyTree, taus, masks=None):
         params, opt_state, hat, metrics = round_body(
             cfg, loss_fn, opt, sub, state.params, state.opt_state,
             state.hat_params, state.rng, state.round_idx, batches, constrain,
-            taus=taus)
+            taus=taus, masks=masks)
         state = state._replace(
             params=params, opt_state=opt_state, hat_params=hat,
             round_idx=state.round_idx + 1)
         return state, metrics
 
-    if dynamic_taus:
+    if participation:
+        def round_fn(state: DFLState, batches: PyTree, tau1, tau2,
+                     node_mask, edge_mask):
+            return body(state, batches,
+                        (jnp.asarray(tau1, jnp.int32),
+                         jnp.asarray(tau2, jnp.int32)),
+                        masks=(jnp.asarray(node_mask, jnp.int32),
+                               jnp.asarray(edge_mask, jnp.int32)))
+    elif dynamic_taus:
         def round_fn(state: DFLState, batches: PyTree, tau1, tau2):
             return body(state, batches,
                         (jnp.asarray(tau1, jnp.int32),

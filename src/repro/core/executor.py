@@ -104,6 +104,14 @@ class RoundExecutor:
       dynamic: True (default) compiles the dynamic-tau round once; False is
         the keyed static fallback — one compile per distinct (tau1, tau2),
         cached.
+      participation: widen the schedule rows to ``[K, 2 + N + E]`` — per
+        round, (tau1, tau2) followed by an [N] 0/1 node-participation mask
+        and an [E] 0/1 edge mask over ``cfg.topology.edges()`` — and run
+        the sporadic round semantic (``round_body(..., masks=...)``).
+        Plain [K, 2] trajectories are auto-padded with all-ones masks (and
+        stay bitwise the unmasked rounds). Dynamic mode only: masks are
+        schedule DATA scanned as xs, so heterogeneous participation shares
+        the one compiled superstep (zero recompiles, audited).
       donate: donate the DFLState argument of every dispatch (the caller
         must treat the passed-in state as consumed).
       telemetry: optional ``repro.obs.Telemetry`` sink; dispatches emit
@@ -135,12 +143,21 @@ class RoundExecutor:
         node_axes: Sequence[str] = ("data",),
         use_kernels: bool = False,
         dynamic: bool = True,
+        participation: bool = False,
         donate: bool = True,
         telemetry=None,
     ):
         self.cfg = cfg
         self.dynamic = dynamic
         self.donate = donate
+        self.participation = participation
+        self.num_nodes = cfg.topology.num_nodes
+        self.num_edges = cfg.topology.num_edges
+        if participation and not dynamic:
+            raise ValueError(
+                "participation masks are schedule data on the dynamic "
+                "path; the static fallback keys compiles on (tau1, tau2) "
+                "and cannot express per-round masks")
         self._make_kw = dict(
             constrain=constrain, engine=engine, mesh=mesh,
             node_axes=tuple(node_axes), use_kernels=use_kernels)
@@ -154,7 +171,9 @@ class RoundExecutor:
         self._static_cache: Dict[Tuple[int, int], Callable] = {}
         if dynamic:
             round_fn = make_round_fn(cfg, loss_fn, opt, dynamic_taus=True,
+                                     participation=participation,
                                      **self._make_kw)
+            n, e = self.num_nodes, self.num_edges
 
             def superstep(state: DFLState, batches: PyTree, taus):
                 self._trace_count += 1  # fires per trace == per compile
@@ -162,7 +181,19 @@ class RoundExecutor:
 
                 def body(st, xs):
                     b, tau = xs
-                    st, metrics = round_fn(st, b, tau[0], tau[1])
+                    if participation:
+                        st, metrics = round_fn(
+                            st, b, tau[0], tau[1],
+                            tau[2:2 + n], tau[2 + n:])
+                        # realized participation alongside the realized
+                        # schedule: what each round ACTUALLY ran.
+                        metrics = dict(
+                            metrics,
+                            active_nodes=jnp.sum(tau[2:2 + n]),
+                            masked_edges=(jnp.int32(e)
+                                          - jnp.sum(tau[2 + n:])))
+                    else:
+                        st, metrics = round_fn(st, b, tau[0], tau[1])
                     # tag metrics with the REALIZED schedule so per-round
                     # accounting survives heterogeneous trajectories.
                     return st, dict(metrics, tau1=tau[0], tau2=tau[1])
@@ -242,9 +273,32 @@ class RoundExecutor:
                 "rebuild the executor with a larger tau2_max")
         return tau1, tau2
 
+    @property
+    def row_width(self) -> int:
+        """Trajectory row width: 2, or 2 + N + E with participation."""
+        if self.participation:
+            return 2 + self.num_nodes + self.num_edges
+        return 2
+
     def _check_trajectory(self, taus, k: int) -> np.ndarray:
         arr = np.asarray(taus, dtype=np.int32)
-        if arr.ndim != 2 or arr.shape[1] != 2:
+        if self.participation:
+            if arr.ndim != 2 or arr.shape[1] not in (2, self.row_width):
+                raise ValueError(
+                    f"participation trajectory must be [K, 2] (all-active) "
+                    f"or [K, {self.row_width}] (tau1, tau2, node mask "
+                    f"[{self.num_nodes}], edge mask [{self.num_edges}]) "
+                    f"rows, got shape {arr.shape}")
+            if arr.shape[1] == 2:  # plain schedule: everyone participates
+                arr = np.concatenate(
+                    [arr, np.ones((arr.shape[0], self.row_width - 2),
+                                  np.int32)], axis=1)
+            masks = arr[:, 2:]
+            if masks.size and not np.isin(masks, (0, 1)).all():
+                raise ValueError(
+                    "participation masks must be 0/1 "
+                    f"(got values {sorted(set(masks.ravel().tolist()))})")
+        elif arr.ndim != 2 or arr.shape[1] != 2:
             raise ValueError(
                 f"trajectory must be [K, 2] (tau1, tau2) rows, got shape "
                 f"{arr.shape}")
@@ -402,20 +456,38 @@ class HostPrefetcher:
     Failure paths are hard errors, not asserts (they survive ``-O``):
     double-``schedule`` and ``take`` without a schedule raise
     ``RuntimeError``; a worker exception is re-raised on ``take``.
-    ``stats`` counts scheduled/taken/cancelled/stale/errors; with a
-    ``telemetry`` sink the WORKER thread emits a ``prefetch`` build span
+
+    ``retries``: transient batch-build ``Exception``s are retried on the
+    worker thread up to ``retries`` extra attempts with exponential
+    backoff (``backoff_s``, doubling per attempt) before the LAST error is
+    parked for ``take()`` to re-raise — a flaky data source degrades a
+    prefetch to slower instead of killing the run. Non-``Exception``
+    ``BaseException``s (KeyboardInterrupt, SystemExit) are never retried.
+    ``close()`` is the clean-shutdown path: it stops any backoff wait,
+    joins the pending worker (no thread leak on teardown), and drops its
+    result/error; the prefetcher refuses new ``schedule`` calls after.
+
+    ``stats`` counts scheduled/taken/cancelled/stale/errors/retries; with
+    a ``telemetry`` sink the WORKER thread emits a ``prefetch`` build span
     (so host batch construction shows as its own track in the timeline)
-    and cancels/stales emit instants.
+    and cancels/stales/retries emit instants.
     """
 
-    def __init__(self, telemetry=None):
+    def __init__(self, telemetry=None, retries: int = 0,
+                 backoff_s: float = 0.05):
+        assert retries >= 0 and backoff_s >= 0.0
         self._pending: Optional[Tuple[threading.Thread, dict, Any]] = None
         self._tel = telemetry
+        self._retries = int(retries)
+        self._backoff_s = float(backoff_s)
+        self._stop = threading.Event()
         self.stats: Dict[str, int] = {
             "scheduled": 0, "taken": 0, "cancelled": 0, "stale": 0,
-            "errors": 0}
+            "errors": 0, "retries": 0}
 
     def schedule(self, fn: Callable, *args, meta: Any = None) -> None:
+        if self._stop.is_set():
+            raise RuntimeError("prefetcher closed — no further schedules")
         if self._pending is not None:
             raise RuntimeError(
                 "previous prefetch not taken — call take() or cancel() "
@@ -427,9 +499,24 @@ class HostPrefetcher:
         def work():
             t0 = tel.now() if tel is not None else 0.0
             try:
-                box["out"] = fn(*args)
-            except BaseException as e:  # re-raised on take()
-                box["err"] = e
+                for attempt in range(self._retries + 1):
+                    try:
+                        box["out"] = fn(*args)
+                        box.pop("err", None)
+                        return
+                    except BaseException as e:  # re-raised on take()
+                        box["err"] = e
+                        if (attempt >= self._retries
+                                or not isinstance(e, Exception)):
+                            return
+                        self.stats["retries"] += 1
+                        if tel is not None:
+                            tel.emit("prefetch", track="prefetch",
+                                     name="retry", action="retry",
+                                     attempt=attempt + 1)
+                        # interruptible backoff: close() wakes it
+                        if self._stop.wait(self._backoff_s * (2 ** attempt)):
+                            return
             finally:
                 if tel is not None:
                     tel.emit("prefetch", track="prefetch", name="build",
@@ -477,6 +564,23 @@ class HostPrefetcher:
         if self._tel is not None:
             self._tel.emit("prefetch", track="prefetch", name="stale",
                            action="stale")
+
+    def close(self) -> None:
+        """Clean shutdown: wake any backoff wait, join the pending worker
+        thread, and discard its result or parked error. Idempotent; the
+        prefetcher rejects ``schedule`` afterwards. Call on every exit
+        path (success, exception, signal teardown) so a failed build can
+        never leak its thread past the run."""
+        already = self._stop.is_set()
+        self._stop.set()
+        if self._pending is not None:
+            t, _box, _meta = self._pending
+            self._pending = None
+            t.join()
+            self.stats["cancelled"] += 1
+        if self._tel is not None and not already:
+            self._tel.emit("prefetch", track="prefetch", name="close",
+                           action="close")
 
 
 class MetricsBuffer:
@@ -546,12 +650,14 @@ class MetricsBuffer:
                            rounds=n, window_s=elapsed)
         per_round_s = elapsed / max(n, 1)
         rows: List[dict] = []
+        int_cols = ("active_nodes", "masked_edges")
         for round0, k, tau1, tau2, metrics in self._pending:
             host = {key: np.asarray(v) for key, v in metrics.items()}
             tau1s = host.pop("tau1", None)
             tau2s = host.pop("tau2", None)
             for i in range(k):
-                row = {key: float(v[i]) for key, v in host.items()}
+                row = {key: (int(v[i]) if key in int_cols else float(v[i]))
+                       for key, v in host.items()}
                 row.update(
                     round=round0 + i,
                     tau1=int(tau1s[i]) if tau1s is not None else tau1,

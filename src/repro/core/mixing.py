@@ -20,7 +20,6 @@ collective-byte difference.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
@@ -36,6 +35,8 @@ __all__ = [
     "mix_dense",
     "mix_dense_power",
     "mix_ppermute_shifts",
+    "masked_mixing_matrix",
+    "masked_shift_weights",
     "gossip_copies_per_step",
     "mixing_bytes_per_step",
 ]
@@ -45,10 +46,53 @@ def _as_mixing_array(topology: Topology, dtype) -> jnp.ndarray:
     return jnp.asarray(topology.mixing, dtype=dtype)
 
 
-def mix_dense(params: PyTree, topology: Topology) -> PyTree:
+def _edge_tables(topology: Topology) -> Tuple[np.ndarray, np.ndarray]:
+    """(has_edge [N,N] bool, eidx [N,N] int32) for the canonical edge list."""
+    n = topology.num_nodes
+    has_edge = np.zeros((n, n), dtype=bool)
+    eidx = np.zeros((n, n), dtype=np.int32)
+    for e, (a, b) in enumerate(topology.edges()):
+        has_edge[a, b] = has_edge[b, a] = True
+        eidx[a, b] = eidx[b, a] = e
+    return has_edge, eidx
+
+
+def masked_mixing_matrix(
+    topology: Topology, edge_mask: jnp.ndarray, dtype
+) -> jnp.ndarray:
+    """The runtime confusion matrix for a round with masked edges.
+
+    ``edge_mask`` is a traced [E] 0/1 vector over ``topology.edges()``. A
+    masked edge carries no gossip: its off-diagonal entries are zeroed and
+    the lost weight moves onto BOTH endpoints' diagonals, so the result
+    stays symmetric doubly stochastic. With all-ones masks the arithmetic
+    is exact (multiply by 1.0, add 0.0) and the matrix is bitwise equal to
+    ``topology.mixing`` — the participation path degrades to the plain
+    round with no numerical drift.
+    """
+    cm = jnp.asarray(topology.mixing, dtype=dtype)
+    if topology.num_edges == 0:
+        return cm
+    has_edge, eidx = _edge_tables(topology)
+    gate = jnp.where(jnp.asarray(has_edge),
+                     edge_mask.astype(dtype)[jnp.asarray(eidx)],
+                     jnp.ones((), dtype))
+    masked = cm * gate
+    # removed[i] = sum_j C[j, i] (1 - gate[j, i]) — the weight node i no
+    # longer receives, returned to its self loop.
+    removed = jnp.sum(cm * (jnp.ones((), dtype) - gate), axis=0)
+    return masked + jnp.diag(removed)
+
+
+def mix_dense(
+    params: PyTree, topology: Topology,
+    edge_mask: Optional[jnp.ndarray] = None,
+) -> PyTree:
     """One gossip step, X <- X C, as a dense contraction over the node axis.
 
     Every leaf: [N, ...] -> [N, ...] with out[i] = sum_j C[j, i] leaf[j].
+    ``edge_mask`` (traced [E] over ``topology.edges()``) replaces C with
+    ``masked_mixing_matrix`` — bitwise-identical at all ones.
     """
     c = topology.mixing
 
@@ -56,7 +100,11 @@ def mix_dense(params: PyTree, topology: Topology) -> PyTree:
         # ellipsis einsum keeps the trailing-dim shardings intact (an
         # explicit reshape-to-2D here makes GSPMD all-gather whole stacked
         # weight trees — observed 200 GiB/device before this was fixed).
-        cm = _as_mixing_array(topology, jnp.promote_types(x.dtype, jnp.float32))
+        dtype = jnp.promote_types(x.dtype, jnp.float32)
+        if edge_mask is None:
+            cm = _as_mixing_array(topology, dtype)
+        else:
+            cm = masked_mixing_matrix(topology, edge_mask, dtype)
         mixed = jnp.einsum("ji,j...->i...", cm, x.astype(cm.dtype))
         return mixed.astype(x.dtype)
 
@@ -83,11 +131,34 @@ def mix_dense_power(params: PyTree, topology: Topology, tau2: int) -> PyTree:
     return mix_dense(params, topo_pow)
 
 
+def masked_shift_weights(
+    shifts: Sequence[Tuple[int, float]],
+    self_weight: float,
+    shift_masks: Sequence[jnp.ndarray],
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, ...]]:
+    """(effective self weight, per-shift effective weights) for one node.
+
+    ``shift_masks[k]`` is this node's traced 0/1 scalar for shift k's edge.
+    A masked shift contributes weight 0 and its weight returns to the self
+    loop: ``w_self + sum_k w_k (1 - m_k)``. With all-ones masks each term
+    is an exact ``+ 0.0`` / ``* 1.0`` so the weights are bitwise the static
+    ones — the masked sparse gossip then matches the legacy path bitwise.
+    """
+    one = jnp.float32(1.0)
+    w_self = jnp.float32(self_weight)
+    for (_, w), m in zip(shifts, shift_masks):
+        w_self = w_self + jnp.float32(w) * (one - m.astype(jnp.float32))
+    eff = tuple(jnp.float32(w) * m.astype(jnp.float32)
+                for (_, w), m in zip(shifts, shift_masks))
+    return w_self, eff
+
+
 def mix_ppermute_shifts(
     params: PyTree,
     shifts: Sequence[Tuple[int, float]],
     self_weight: float,
     axis_name: str | Tuple[str, ...],
+    shift_masks: Optional[Sequence[jnp.ndarray]] = None,
 ) -> PyTree:
     """One gossip step for a circulant C, inside shard_map.
 
@@ -99,16 +170,30 @@ def mix_ppermute_shifts(
     (equivalently sends to i + s). self_weight: diagonal of C. An empty
     shift list is the degenerate no-edge topology (C = I): no traffic, every
     node keeps self_weight (= 1) of itself.
+
+    shift_masks: optional per-shift traced 0/1 scalars for THIS node (one
+    per entry of ``shifts``, gathered from the round's edge mask by the
+    substrate). The ppermutes still run on every shift — masking gates the
+    accumulation weight, not the collective, so the compiled HLO (and the
+    ``collective-matching`` audit) is identical across masks and the
+    superstep never recompiles.
     """
     names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
     n_total = axis_size(names)
+
+    if shift_masks is not None:
+        assert len(shift_masks) == len(shifts)
+        w_self, w_shift = masked_shift_weights(shifts, self_weight,
+                                               shift_masks)
+    else:
+        w_self, w_shift = self_weight, tuple(w for (_, w) in shifts)
 
     def perm_for(shift: int):
         return [(src, (src + shift) % n_total) for src in range(n_total)]
 
     def mix_leaf(x: jnp.ndarray) -> jnp.ndarray:
-        acc = (self_weight * x.astype(jnp.float32))
-        for (s, w) in shifts:
+        acc = (w_self * x.astype(jnp.float32))
+        for (s, _), w in zip(shifts, w_shift):
             moved = jax.lax.ppermute(x, names if len(names) > 1 else names[0],
                                      perm=perm_for(int(s)))
             acc = acc + w * moved.astype(jnp.float32)

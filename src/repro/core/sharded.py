@@ -52,6 +52,7 @@ def make_sharded_round_fn(
     node_axes: Sequence[str] = ("data",),
     use_kernels: bool = False,
     dynamic_taus: bool = False,
+    participation: bool = False,
     constrain=None,
 ) -> Callable[..., Tuple[DFLState, dict]]:
     """Sparse-gossip round; call under jax.jit. State leaves carry the
@@ -64,6 +65,14 @@ def make_sharded_round_fn(
     from two device scalars or sliced per round from a [K, 2] trajectory
     scanned as xs (``core.executor.dispatch_trajectory``) — so the
     per-shift ppermutes inside the dynamic loops stay collectively matched.
+
+    ``participation``: round_fn(state, batches, tau1, tau2, node_mask,
+    edge_mask) — the masks ride through the shard_map boundary REPLICATED
+    (P()), like the tau scalars: every node sees the full [N]/[E] vectors
+    and takes its local view via ``ShardedSubstrate.node_mask_local`` /
+    ``shift_masks``. The ppermutes still run on masked edges (masks gate
+    accumulation weights, not collectives), so the program stays
+    collectively matched and mask changes never retrace.
 
     ``constrain``: the dense engine's stacked-param sharding re-assertion.
     The sparse engine cannot honor it on its auto (GSPMD) axes — the specs
@@ -107,7 +116,7 @@ def make_sharded_round_fn(
     )
     batch_spec = P(None, node_entry)
 
-    def body(state: DFLState, batches: PyTree, taus=None):
+    def body(state: DFLState, batches: PyTree, taus=None, masks=None):
         # local leaves: params [1, ...]; batches [tau1, 1, B, ...]
         squeeze = lambda t: jax.tree_util.tree_map(lambda x: x[0], t)
         unsqueeze = lambda t: jax.tree_util.tree_map(lambda x: x[None], t)
@@ -120,7 +129,7 @@ def make_sharded_round_fn(
             state.rng, state.round_idx,
             # drop the local (size-1) node dim, keeping the leading tau1 dim
             jax.tree_util.tree_map(lambda x: x[:, 0], batches),
-            taus=taus)
+            taus=taus, masks=masks)
         new_state = DFLState(
             params=unsqueeze(params),
             opt_state=unsqueeze(opt_state),
@@ -135,6 +144,25 @@ def make_sharded_round_fn(
     # boundary: XLA rejects partially-manual shardings on the typed key's
     # trailing u32[2] layout. It rides through as None and is re-attached.
     out_specs = (state_specs._replace(rng=None), P())
+
+    if participation:
+        assert dynamic_taus, (
+            "participation masks ride the dynamic schedule-as-data path")
+        mapped = substrate_lib.shard_map(
+            lambda st, b, t1, t2, nm, em: body(st, b, (t1, t2), (nm, em)),
+            mesh, (state_specs, batch_spec, P(), P(), P(), P()), out_specs,
+            manual_axes=tuple(node_axes), check=False)
+
+        def round_fn(state: DFLState, batches: PyTree, tau1, tau2,
+                     node_mask, edge_mask):
+            new_state, metrics = mapped(
+                state, batches, jnp.asarray(tau1, jnp.int32),
+                jnp.asarray(tau2, jnp.int32),
+                jnp.asarray(node_mask, jnp.int32),
+                jnp.asarray(edge_mask, jnp.int32))
+            return new_state._replace(rng=state.rng), metrics
+
+        return round_fn
 
     if dynamic_taus:
         mapped = substrate_lib.shard_map(

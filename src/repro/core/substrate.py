@@ -142,12 +142,26 @@ class NodeSubstrate:
     Contract (N = number of nodes):
       * ``vmap(fn)``            — lift a per-node fn over the node axis.
       * ``node_keys(key)``      — per-node PRNG keys, fold_in(key, node_idx).
-      * ``mix(tree)``           — one uncompressed gossip step X <- X C.
+      * ``mix(tree, edge_mask=None)`` — one uncompressed gossip step
+                                  X <- X C; ``edge_mask`` (traced [E] 0/1
+                                  over ``topology.edges()``) drops masked
+                                  edges and renormalizes onto the diagonal
+                                  (bitwise the plain step at all ones).
       * ``mean_over_nodes(x)``  — mean over the node axis of per-node
                                   scalars (dense: leading array axis;
                                   sparse: pmean collective).
       * ``sum_per_node(x)``     — sum an array down to one scalar per node.
       * ``mean_tree(tree)``     — per-leaf f32 mean over nodes.
+
+    Participation hooks (sporadic rounds; see docs/ARCHITECTURE.md):
+      * ``node_mask_local(node_mask)``  — project the round's replicated
+        [N] node mask to this substrate's local view (dense: the [N]
+        vector itself; sparse: this node's scalar entry).
+      * ``select_nodes(mask, new, old)`` — per-node select between two
+        same-shaped trees (masked nodes keep ``old``); a bitwise identity
+        for ``new`` wherever the mask is one.
+      * ``masked_mean_over_nodes(x, mask)`` — mean of per-node scalars
+        over ACTIVE nodes only; bitwise ``mean_over_nodes`` at all ones.
     """
 
     num_nodes: int
@@ -158,7 +172,8 @@ class NodeSubstrate:
     def node_keys(self, key: jax.Array):
         raise NotImplementedError
 
-    def mix(self, tree: PyTree) -> PyTree:
+    def mix(self, tree: PyTree,
+            edge_mask: Optional[jnp.ndarray] = None) -> PyTree:
         raise NotImplementedError
 
     def mean_over_nodes(self, x: jnp.ndarray) -> jnp.ndarray:
@@ -169,6 +184,23 @@ class NodeSubstrate:
 
     def mean_tree(self, tree: PyTree) -> PyTree:
         raise NotImplementedError
+
+    def node_mask_local(self, node_mask: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def select_nodes(self, mask_local: jnp.ndarray, new: PyTree,
+                     old: PyTree) -> PyTree:
+        raise NotImplementedError
+
+    def masked_mean_over_nodes(self, x: jnp.ndarray,
+                               mask_local: jnp.ndarray) -> jnp.ndarray:
+        """mean(x * m) / max(mean(m), 1/N): exact ``/ 1.0`` at all ones,
+        and 0 (not NaN) when every node is masked."""
+        m = mask_local.astype(jnp.float32)
+        num = self.mean_over_nodes(x * m)
+        den = jnp.maximum(self.mean_over_nodes(m),
+                          jnp.float32(1.0 / max(self.num_nodes, 1)))
+        return num / den
 
     # -- shared derived ops (identical formulas on both engines) ----------
 
@@ -232,10 +264,11 @@ class DenseSubstrate(NodeSubstrate):
         return jax.vmap(lambda i: jax.random.fold_in(key, i))(
             jnp.arange(self.num_nodes, dtype=jnp.int32))
 
-    def mix(self, tree):
+    def mix(self, tree, edge_mask=None):
         from repro.core import mixing as mixing_lib
 
-        return mixing_lib.mix_dense(tree, self.topology)
+        return mixing_lib.mix_dense(tree, self.topology,
+                                    edge_mask=edge_mask)
 
     def mean_over_nodes(self, x):
         return jnp.mean(x, axis=0)
@@ -246,6 +279,17 @@ class DenseSubstrate(NodeSubstrate):
     def mean_tree(self, tree):
         return jax.tree_util.tree_map(
             lambda x: jnp.mean(x.astype(jnp.float32), axis=0), tree)
+
+    def node_mask_local(self, node_mask):
+        return node_mask
+
+    def select_nodes(self, mask_local, new, old):
+        def sel(nw, od):
+            m = mask_local.astype(bool).reshape(
+                (self.num_nodes,) + (1,) * (nw.ndim - 1))
+            return jnp.where(m, nw, od)
+
+        return jax.tree_util.tree_map(sel, new, old)
 
 
 class ShardedSubstrate(NodeSubstrate):
@@ -278,6 +322,27 @@ class ShardedSubstrate(NodeSubstrate):
                             if topology.num_nodes else 1.0)
         self.num_nodes = topology.num_nodes
         self.use_kernels = use_kernels
+        # Per-shift edge lookup for participation masks: entry [k, i] is
+        # the canonical ``topology.edges()`` index of the edge node i
+        # receives over on shift k (from node (i - s_k) mod N). Both
+        # endpoints of an undirected edge resolve to the same entry, so a
+        # masked edge renormalizes symmetrically on both sides.
+        if self.shifts and topology.num_edges:
+            eix = topology.edge_index()
+            n = self.num_nodes
+            self.shift_edge_idx = np.asarray(
+                [[eix[tuple(sorted(((i - s) % n, i)))] for i in range(n)]
+                 for (s, _) in self.shifts], dtype=np.int32)
+        else:
+            self.shift_edge_idx = np.zeros((0, self.num_nodes), np.int32)
+
+    def shift_masks(self, edge_mask: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+        """This node's traced 0/1 scalar per shift, gathered from the
+        round's replicated [E] edge mask."""
+        idx = self.node_index()
+        table = jnp.asarray(self.shift_edge_idx)
+        return tuple(edge_mask[table[k, idx]].astype(jnp.float32)
+                     for k in range(len(self.shifts)))
 
     def node_index(self) -> jnp.ndarray:
         idx = jnp.zeros((), jnp.int32)
@@ -291,18 +356,27 @@ class ShardedSubstrate(NodeSubstrate):
     def node_keys(self, key):
         return jax.random.fold_in(key, self.node_index())
 
-    def mix(self, tree):
+    def mix(self, tree, edge_mask=None):
         from repro.core import mixing as mixing_lib
 
+        masks = (self.shift_masks(edge_mask)
+                 if edge_mask is not None else None)
         if not self.use_kernels:
             return mixing_lib.mix_ppermute_shifts(
-                tree, self.shifts, self.self_weight, self.axis)
+                tree, self.shifts, self.self_weight, self.axis,
+                shift_masks=masks)
 
         from repro.kernels import ops as kernel_ops
 
         n_total = axis_size(self.axis)
-        weights = jnp.asarray(
-            [self.self_weight] + [w for _, w in self.shifts], jnp.float32)
+        if masks is None:
+            weights = jnp.asarray(
+                [self.self_weight] + [w for _, w in self.shifts],
+                jnp.float32)
+        else:
+            w_self, w_shift = mixing_lib.masked_shift_weights(
+                self.shifts, self.self_weight, masks)
+            weights = jnp.stack([w_self] + list(w_shift))
 
         def mix_leaf(x):
             if not self.shifts:
@@ -405,3 +479,11 @@ class ShardedSubstrate(NodeSubstrate):
     def mean_tree(self, tree):
         return jax.tree_util.tree_map(
             lambda x: jax.lax.pmean(x.astype(jnp.float32), self.axis), tree)
+
+    def node_mask_local(self, node_mask):
+        return node_mask[self.node_index()]
+
+    def select_nodes(self, mask_local, new, old):
+        keep = mask_local.astype(bool)
+        return jax.tree_util.tree_map(
+            lambda nw, od: jnp.where(keep, nw, od), new, old)

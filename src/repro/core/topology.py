@@ -92,6 +92,29 @@ class Topology:
                                     np.eye(self.num_nodes), atol=1e-12))
         return len(self.shifts()) > 0
 
+    def edges(self) -> Tuple[Tuple[int, int], ...]:
+        """Canonical undirected edge list: sorted (i, j) pairs with i < j.
+
+        This ordering is THE edge enumeration contract for participation
+        masks: ``edge_mask[e]`` in ``round_body`` / ``FaultPlan`` refers to
+        ``edges()[e]``, and both directions of an undirected edge share the
+        one mask entry (masking is symmetric, so the confusion matrix stays
+        symmetric doubly stochastic after renormalization).
+        """
+        out = set()
+        for i, nbrs in enumerate(self.neighbors):
+            for (j, _) in nbrs:
+                out.add((min(i, j), max(i, j)))
+        return tuple(sorted(out))
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.edges())
+
+    def edge_index(self) -> Dict[Tuple[int, int], int]:
+        """Map (i, j) with i < j -> position in ``edges()``."""
+        return {e: k for k, e in enumerate(self.edges())}
+
     def shifts(self) -> List[Tuple[int, float]]:
         """Common (shift, weight) structure if C is circulant, else []."""
         n = self.num_nodes

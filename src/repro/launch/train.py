@@ -78,6 +78,7 @@ from repro.core import (DFLConfig, HostPrefetcher, MetricsBuffer,
                         paper_quasi_ring)
 from repro.core.compression import Identity, tree_wire_bits
 from repro.data.lm import SyntheticLM, lm_batches_for_dfl
+from repro.faults import FaultPlan, load_fault_spec
 from repro.kernels.ops import op_stats_delta
 from repro.launch.steps import kernelize_compressor
 from repro.models import train_loss, init_params
@@ -151,6 +152,16 @@ def main(argv=None) -> None:
                          "trajectories dispatched inside each superstep "
                          "(needs --plan-budget and --dispatch fused); "
                          "auto = adaptive iff --plan-budget is set")
+    ap.add_argument("--faults", default="",
+                    help="deterministic fault injection: a JSON fault spec "
+                         "(or @file.json) — see repro.faults. Rounds run "
+                         "SPORADICALLY: crashed/masked nodes skip local "
+                         "updates, dead edges gossip identity (mixing "
+                         "renormalized), all with zero recompiles "
+                         "(needs --dispatch fused)")
+    ap.add_argument("--faults-seed", type=int, default=None,
+                    help="override the fault spec's seed (the "
+                         "SporadicParticipation Bernoulli stream)")
     ap.add_argument("--history-out", default="",
                     help="write the round/plan history JSON here (a "
                          "schema-versioned view over the telemetry stream)")
@@ -174,6 +185,19 @@ def main(argv=None) -> None:
         args.use_kernels)
     topology = make_topology(args.topology, n)
     opt = make_optimizer(args.optimizer, args.lr)
+
+    fault_plan = None
+    if args.faults:
+        if args.dispatch != "fused":
+            raise SystemExit("--faults runs sporadic rounds through the "
+                             "participation trajectory path; the static "
+                             "keyed cache can't (use --dispatch fused)")
+        spec = load_fault_spec(args.faults)
+        if args.faults_seed is not None:
+            spec["seed"] = args.faults_seed
+        fault_plan = FaultPlan.from_spec(topology, spec)
+        print(f"fault plan: {len(fault_plan.faults)} fault(s), "
+              f"seed={fault_plan.seed}")
 
     corpus = SyntheticLM(vocab_size=cfg.vocab_size, num_nodes=n,
                          noniid_alpha=args.noniid)
@@ -250,7 +274,8 @@ def main(argv=None) -> None:
     executor = RoundExecutor(
         dcfg_max, loss_fn, opt, engine=engine, mesh=mesh,
         node_axes=("nodes",), use_kernels=args.use_kernels,
-        dynamic=args.dispatch == "fused", telemetry=tel)
+        dynamic=args.dispatch == "fused",
+        participation=fault_plan is not None, telemetry=tel)
 
     # Wire accounting is DEPLOYMENT cost (what a real DFL network ships:
     # engine="auto" = per-neighbor when circulant), not the host-simulation
@@ -367,7 +392,10 @@ def main(argv=None) -> None:
     compiles_after_warmup = executor.compile_count
 
     buffer = MetricsBuffer(telemetry=tel)
-    prefetch = HostPrefetcher(telemetry=tel)
+    # transient host batch-build failures retry with backoff on the
+    # worker thread; the close() in the finally below joins any pending
+    # worker on EVERY exit path (no thread leak past the run).
+    prefetch = HostPrefetcher(telemetry=tel, retries=2)
     t0 = time.perf_counter()
     rounds_done = 0
     wire_total = 0.0
@@ -405,11 +433,33 @@ def main(argv=None) -> None:
         for row in rows:
             r = row["round"]
             wire_total += wire_bits_for(row["tau1"], row["tau2"])
+            extra = {}
+            if "active_nodes" in row:
+                # sporadic run: realized participation rides every round
+                # event (history/report attribute loss to availability).
+                degraded = (row["active_nodes"] < n
+                            or row["masked_edges"] > 0)
+                extra = dict(active_nodes=row["active_nodes"],
+                             masked_edges=row["masked_edges"],
+                             degraded=degraded)
             tel.emit("round", track="rounds", name=f"round-{r}",
                      round=r, tau1=row["tau1"], tau2=row["tau2"],
                      loss=row["loss"], consensus_sq=row["consensus_sq"],
                      round_s=row["round_s"],
-                     wire_bits=wire_bits_for(row["tau1"], row["tau2"]))
+                     wire_bits=wire_bits_for(row["tau1"], row["tau2"]),
+                     **extra)
+            if extra.get("degraded"):
+                tel.emit("degraded", track="faults", name=f"degraded-{r}",
+                         round=r, active_nodes=row["active_nodes"],
+                         masked_edges=row["masked_edges"])
+            if fault_plan is not None:
+                for payload in fault_plan.events(r):
+                    tel.emit("fault", track="faults",
+                             name=f"{payload['kind']}-{payload['phase']}",
+                             round=r, **payload)
+                if controller is not None:
+                    nm, em = fault_plan.masks(r)
+                    controller.observe_participation(nm, em)
             last_loss = row["loss"]
             if (r + 1) % args.log_every == 0:
                 done = r + 1 - start_round
@@ -425,119 +475,131 @@ def main(argv=None) -> None:
                 [(row["tau1"], row["tau2"]) for row in rows],
                 sum(row["round_s"] for row in rows))
 
-    if schedule_mode == "trajectory":
-        # Per-round schedule control: every superstep dispatches a [k, 2]
-        # trajectory planned by the controller — the re-plan happens
-        # INSIDE the superstep (probe rounds included), not at its
-        # boundary, and the realized per-round schedule comes back in the
-        # metrics rows.
-        r = start_round
+    try:
+        if schedule_mode == "trajectory":
+            # Per-round schedule control: every superstep dispatches a [k, 2]
+            # trajectory planned by the controller — the re-plan happens
+            # INSIDE the superstep (probe rounds included), not at its
+            # boundary, and the realized per-round schedule comes back in the
+            # metrics rows.
+            r = start_round
+            while r < end:
+                k = chunk_len(r, rounds_done)
+                taus = controller.next_trajectory(k, round_idx=rounds_done)
+                if taus is None:
+                    print(f"budget exhausted after {rounds_done} rounds "
+                          f"({controller.spent_s:.1f}s)")
+                    break
+                if len(taus) not in warmed_shapes:
+                    # a superstep length the pre-loop warmup never saw (a
+                    # budget-paced short chunk, or the shifted chunk grid
+                    # after one): a new batch SHAPE — warm it on dummy data
+                    # so the measured rounds stay compile-free.
+                    tw0 = time.perf_counter()
+                    executor.warmup(state, dummy_batches(len(taus)))
+                    warmed_shapes.add(len(taus))
+                    controller.spend_overhead(time.perf_counter() - tw0)
+                # host batch build is real wall-clock the budget pays for
+                # (trajectory mode has no prefetch overlap: the chunk's
+                # schedule is only known now) — charge it as overhead, not as
+                # round time.
+                tb0 = time.perf_counter()
+                with tel.span("batch-build", track="prefetch"):
+                    batches = stack_round_batches(
+                        [round_batch(r + i, int(t1))
+                         for i, (t1, _t2) in enumerate(taus)], tau1_max)
+                controller.spend_overhead(time.perf_counter() - tb0)
+                sched_rows = (fault_plan.mask_trajectory(taus, r)
+                              if fault_plan is not None else taus)
+                t_dispatch = time.perf_counter()
+                with op_stats_delta() as opd:
+                    state, metrics = executor.dispatch_trajectory(
+                        state, batches, sched_rows)
+                buffer.push(r, len(taus), None, None, metrics,
+                            dispatched_at=t_dispatch)
+                r += len(taus)
+                rounds_done += len(taus)
+                flush_rows()   # every realized round enters the cost fit
+                emit_counters(r - len(taus), len(taus), opd)
+                if (args.ckpt_every and args.ckpt_dir
+                        and r // args.ckpt_every
+                        > last_ckpt // args.ckpt_every):
+                    do_checkpoint(r, {"loss": last_loss})
+                    last_ckpt = r
+
+        # fixed/adaptive modes: the prefetched uniform-schedule superstep loop
+        # (trajectory mode already ran above; r = end skips it).
+        r = end if schedule_mode == "trajectory" else start_round
+        k = chunk_len(r, rounds_done) if r < end else 0
+        if k > 0:
+            prefetch.schedule(build_batches, r, k, tau1, meta=(r, k, tau1))
         while r < end:
-            k = chunk_len(r, rounds_done)
-            taus = controller.next_trajectory(k, round_idx=rounds_done)
-            if taus is None:
-                print(f"budget exhausted after {rounds_done} rounds "
-                      f"({controller.spent_s:.1f}s)")
-                break
-            if len(taus) not in warmed_shapes:
-                # a superstep length the pre-loop warmup never saw (a
-                # budget-paced short chunk, or the shifted chunk grid
-                # after one): a new batch SHAPE — warm it on dummy data
-                # so the measured rounds stay compile-free.
-                tw0 = time.perf_counter()
-                executor.warmup(state, dummy_batches(len(taus)))
-                warmed_shapes.add(len(taus))
-                controller.spend_overhead(time.perf_counter() - tw0)
-            # host batch build is real wall-clock the budget pays for
-            # (trajectory mode has no prefetch overlap: the chunk's
-            # schedule is only known now) — charge it as overhead, not as
-            # round time.
-            tb0 = time.perf_counter()
-            with tel.span("batch-build", track="prefetch"):
-                batches = stack_round_batches(
-                    [round_batch(r + i, int(t1))
-                     for i, (t1, _t2) in enumerate(taus)], tau1_max)
-            controller.spend_overhead(time.perf_counter() - tb0)
-            t_dispatch = time.perf_counter()
-            with op_stats_delta() as opd:
-                state, metrics = executor.dispatch_trajectory(
-                    state, batches, taus)
-            buffer.push(r, len(taus), None, None, metrics,
-                        dispatched_at=t_dispatch)
-            r += len(taus)
-            rounds_done += len(taus)
-            flush_rows()   # every realized round enters the cost fit
-            emit_counters(r - len(taus), len(taus), opd)
+            batches, meta = prefetch.take()
+            if meta != (r, k, tau1):   # stale after a re-plan changed tau1
+                prefetch.mark_stale()
+                with tel.span("stale-rebuild", track="prefetch"):
+                    batches = build_batches(r, k, tau1)
+            t_dispatch = time.perf_counter()  # sync backends EXECUTE inside
+            with op_stats_delta() as opd:     # dispatch
+                if fault_plan is not None:
+                    # widen the uniform chunk to masked participation rows —
+                    # same executable, the masks are just more xs columns.
+                    state, metrics = executor.dispatch_trajectory(
+                        state, batches, fault_plan.mask_trajectory(
+                            np.tile(np.array([[tau1, tau2]], np.int32), (k, 1)),
+                            r))
+                else:
+                    state, metrics = executor.dispatch(state, batches, tau1,
+                                                       tau2)
+            buffer.push(r, k, tau1, tau2, metrics, dispatched_at=t_dispatch)
+            emit_counters(r, k, opd)
+            r += k
+            rounds_done += k
+            # overlap: build the NEXT superstep's batches while the device runs
+            # this one (a later re-plan invalidates at most this one chunk).
+            k_next = chunk_len(r, rounds_done)
+            if k_next > 0:
+                prefetch.schedule(build_batches, r, k_next, tau1,
+                                  meta=(r, k_next, tau1))
+            # host sync boundary: re-plans need per-round timings each chunk;
+            # otherwise only log/checkpoint boundaries (or the end) block.
+            boundary = (controller is not None
+                        or any((rr + 1) % args.log_every == 0
+                               for rr in range(r - k, r))
+                        or (args.ckpt_every
+                            and r // args.ckpt_every > last_ckpt // args.ckpt_every)
+                        or r >= end)
+            if boundary:
+                flush_rows()
             if (args.ckpt_every and args.ckpt_dir
-                    and r // args.ckpt_every
-                    > last_ckpt // args.ckpt_every):
+                    and r // args.ckpt_every > last_ckpt // args.ckpt_every):
+                # superstep granularity: the checkpoint lands at the first
+                # superstep edge at/after the --ckpt-every multiple.
                 do_checkpoint(r, {"loss": last_loss})
                 last_ckpt = r
-
-    # fixed/adaptive modes: the prefetched uniform-schedule superstep loop
-    # (trajectory mode already ran above; r = end skips it).
-    r = end if schedule_mode == "trajectory" else start_round
-    k = chunk_len(r, rounds_done) if r < end else 0
-    if k > 0:
-        prefetch.schedule(build_batches, r, k, tau1, meta=(r, k, tau1))
-    while r < end:
-        batches, meta = prefetch.take()
-        if meta != (r, k, tau1):   # stale after a re-plan changed tau1
-            prefetch.mark_stale()
-            with tel.span("stale-rebuild", track="prefetch"):
-                batches = build_batches(r, k, tau1)
-        t_dispatch = time.perf_counter()  # sync backends EXECUTE inside
-        with op_stats_delta() as opd:     # dispatch
-            state, metrics = executor.dispatch(state, batches, tau1, tau2)
-        buffer.push(r, k, tau1, tau2, metrics, dispatched_at=t_dispatch)
-        emit_counters(r, k, opd)
-        r += k
-        rounds_done += k
-        # overlap: build the NEXT superstep's batches while the device runs
-        # this one (a later re-plan invalidates at most this one chunk).
-        k_next = chunk_len(r, rounds_done)
-        if k_next > 0:
-            prefetch.schedule(build_batches, r, k_next, tau1,
-                              meta=(r, k_next, tau1))
-        # host sync boundary: re-plans need per-round timings each chunk;
-        # otherwise only log/checkpoint boundaries (or the end) block.
-        boundary = (controller is not None
-                    or any((rr + 1) % args.log_every == 0
-                           for rr in range(r - k, r))
-                    or (args.ckpt_every
-                        and r // args.ckpt_every > last_ckpt // args.ckpt_every)
-                    or r >= end)
-        if boundary:
+            if controller is not None:
+                new = controller.maybe_replan(rounds_done)
+                if controller.exhausted:
+                    print(f"budget exhausted after {rounds_done} rounds "
+                          f"({controller.spent_s:.1f}s)")
+                    break
+                if new is not None:
+                    tau1, tau2 = new.tau1, new.tau2
+                    print(f"replanned tau=({tau1},{tau2}) at round {r} "
+                          f"(t_step={new.round_cost.t_compute_step:.3f}s, "
+                          f"t_gossip={new.round_cost.t_gossip_step:.3f}s, "
+                          f"predicted bound {new.predicted_bound:.4f}, "
+                          f"recompiles so far: {executor.compile_count})")
+                    if args.dispatch == "static" and r < end:
+                        # the static cache compiles per (tau1, tau2): pay the
+                        # new key on dummy data now — for the chunk sizes
+                        # still ahead only — not inside a measured round.
+                        warm_executables(remaining_chunk_lens(r, rounds_done),
+                                         tau1, tau2)
+            k = chunk_len(r, rounds_done)
             flush_rows()
-        if (args.ckpt_every and args.ckpt_dir
-                and r // args.ckpt_every > last_ckpt // args.ckpt_every):
-            # superstep granularity: the checkpoint lands at the first
-            # superstep edge at/after the --ckpt-every multiple.
-            do_checkpoint(r, {"loss": last_loss})
-            last_ckpt = r
-        if controller is not None:
-            new = controller.maybe_replan(rounds_done)
-            if controller.exhausted:
-                print(f"budget exhausted after {rounds_done} rounds "
-                      f"({controller.spent_s:.1f}s)")
-                break
-            if new is not None:
-                tau1, tau2 = new.tau1, new.tau2
-                print(f"replanned tau=({tau1},{tau2}) at round {r} "
-                      f"(t_step={new.round_cost.t_compute_step:.3f}s, "
-                      f"t_gossip={new.round_cost.t_gossip_step:.3f}s, "
-                      f"predicted bound {new.predicted_bound:.4f}, "
-                      f"recompiles so far: {executor.compile_count})")
-                if args.dispatch == "static" and r < end:
-                    # the static cache compiles per (tau1, tau2): pay the
-                    # new key on dummy data now — for the chunk sizes
-                    # still ahead only — not inside a measured round.
-                    warm_executables(remaining_chunk_lens(r, rounds_done),
-                                     tau1, tau2)
-        k = chunk_len(r, rounds_done)
-    if prefetch.pending_meta is not None:
-        prefetch.cancel()
-    flush_rows()
+    finally:
+        prefetch.close()
     if args.ckpt_dir:
         do_checkpoint(start_round + rounds_done, {})
     if profiling:

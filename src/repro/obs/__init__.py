@@ -27,9 +27,10 @@ CLI::
     python -m repro.obs trace export events.jsonl --out trace.json
     python -m repro.obs report events.jsonl
 """
-from repro.obs.events import (EVENT_TYPES, REQUIRED_DATA, SCHEMA_VERSION,
-                              make_event, read_events, validate_event,
-                              validate_events, validate_stream, write_events)
+from repro.obs.events import (EVENT_TYPES, KNOWN_SCHEMAS, REQUIRED_DATA,
+                              SCHEMA_VERSION, make_event, read_events,
+                              validate_event, validate_events,
+                              validate_stream, write_events)
 from repro.obs.history import HISTORY_SCHEMA_VERSION, history_view
 from repro.obs.report import format_report, run_report
 from repro.obs.telemetry import NullTelemetry, Telemetry
@@ -40,6 +41,7 @@ __all__ = [
     "EVENT_TYPES",
     "REQUIRED_DATA",
     "SCHEMA_VERSION",
+    "KNOWN_SCHEMAS",
     "HISTORY_SCHEMA_VERSION",
     "Telemetry",
     "NullTelemetry",

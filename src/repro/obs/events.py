@@ -35,6 +35,7 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 __all__ = [
     "SCHEMA_VERSION",
+    "KNOWN_SCHEMAS",
     "EVENT_TYPES",
     "REQUIRED_DATA",
     "make_event",
@@ -45,7 +46,13 @@ __all__ = [
     "write_events",
 ]
 
-SCHEMA_VERSION = 1
+# Schema 2 adds the fault-tolerance vocabulary: ``fault`` (an injected
+# fault window opening/closing) and ``degraded`` (a round that ran with
+# masked nodes/edges — realized participation attached). Schema-1
+# streams stay readable: the new types are additive and every schema-1
+# record is schema-2 valid.
+SCHEMA_VERSION = 2
+KNOWN_SCHEMAS = frozenset({1, 2})
 
 # The typed vocabulary. Each type is a kind of thing that happens in a
 # run; anything else is a schema violation (add the type HERE, with its
@@ -63,6 +70,8 @@ EVENT_TYPES = frozenset({
     "flush",       # a MetricsBuffer host-sync flush
     "span",        # a generic named timed region (with telemetry.span)
     "counters",    # a counter snapshot attributed to its superstep
+    "fault",       # an injected fault window opening or closing (schema 2)
+    "degraded",    # a round run with masked nodes/edges (schema 2)
 })
 
 # Per-type mandatory ``data`` keys (beyond the top-level type/t/track).
@@ -79,6 +88,8 @@ REQUIRED_DATA: Dict[str, Tuple[str, ...]] = {
     "flush": ("rounds",),
     "span": (),
     "counters": (),
+    "fault": ("kind", "phase"),
+    "degraded": ("round", "active_nodes", "masked_edges"),
 }
 
 
@@ -155,9 +166,9 @@ def validate_stream(events: Sequence[Any]) -> List[Tuple[int, str]]:
                            f"got {head.get('type')!r}"))
         else:
             schema = head.get("data", {}).get("schema")
-            if schema != SCHEMA_VERSION:
+            if schema not in KNOWN_SCHEMAS:
                 out.append((0, f"run header schema={schema!r}, this reader "
-                               f"knows schema={SCHEMA_VERSION}"))
+                               f"knows schemas {sorted(KNOWN_SCHEMAS)}"))
     return out
 
 

@@ -8,7 +8,12 @@ emission order) plus a ``schema_version`` key so downstream readers can
 detect the provenance change.
 
 View schema_version 2 == legacy fields derived from event-stream
-schema 1 (``events.SCHEMA_VERSION``).
+schema 1 (``events.SCHEMA_VERSION``). View schema_version 3 adds the
+per-round realized-participation columns ``active_nodes`` /
+``masked_edges`` (from event-stream schema 2's sporadic rounds; None on
+rounds that ran before participation tracking, so full-participation
+streams project losslessly) — they are what lets ``repro.obs report``
+attribute loss progress to availability.
 """
 from __future__ import annotations
 
@@ -16,7 +21,7 @@ from typing import Iterable, List
 
 __all__ = ["HISTORY_SCHEMA_VERSION", "history_view"]
 
-HISTORY_SCHEMA_VERSION = 2
+HISTORY_SCHEMA_VERSION = 3
 
 # Planner decision types that legacy plan_events carried (the
 # controller's ``history`` list mirrored every cause, including
@@ -31,6 +36,7 @@ def history_view(events: Iterable[dict]) -> dict:
         "schema_version": HISTORY_SCHEMA_VERSION,
         "round": [], "loss": [], "consensus_sq": [],
         "tau1": [], "tau2": [], "round_s": [],
+        "active_nodes": [], "masked_edges": [],
     }
     for ev in events:
         if ev.get("type") != "round":
@@ -44,6 +50,11 @@ def history_view(events: Iterable[dict]) -> dict:
         history["tau1"].append(d.get("tau1"))
         history["tau2"].append(d.get("tau2"))
         history["round_s"].append(d.get("round_s"))
+        # schema-2 sporadic rounds carry realized participation; rounds
+        # from older streams (or full-participation executors that don't
+        # track it) project as None.
+        history["active_nodes"].append(d.get("active_nodes"))
+        history["masked_edges"].append(d.get("masked_edges"))
 
     plan_events: List[dict] = [ev.get("data", {}) for ev in events
                                if ev.get("type") in _PLAN_TYPES]

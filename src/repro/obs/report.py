@@ -51,6 +51,36 @@ def run_report(events: Iterable[dict]) -> dict:
             round_summary["loss_first"] = losses[0]
             round_summary["loss_last"] = losses[-1]
 
+    # Availability attribution (schema 2): how much of the run's loss
+    # progress happened in full vs degraded rounds, and the realized
+    # participation rates — the report's answer to "did the sporadic
+    # engine actually keep learning through the faults".
+    part = [r for r in rounds
+            if isinstance(r.get("active_nodes"), (int, float))
+            and isinstance(r.get("masked_edges"), (int, float))]
+    availability = {}
+    if part:
+        degraded = [r for r in part if r.get("degraded")]
+        availability = {
+            "rounds_tracked": len(part),
+            "rounds_degraded": len(degraded),
+            "mean_active_nodes": (sum(r["active_nodes"] for r in part)
+                                  / len(part)),
+            "mean_masked_edges": (sum(r["masked_edges"] for r in part)
+                                  / len(part)),
+        }
+        for name, sel in (("full", [r for r in part
+                                    if not r.get("degraded")]),
+                          ("degraded", degraded)):
+            ls = [r["loss"] for r in sel
+                  if isinstance(r.get("loss"), (int, float))]
+            if len(ls) >= 1:
+                availability[f"loss_delta_{name}"] = ls[-1] - ls[0]
+    faults = Counter(
+        f"{e['data'].get('kind', '?')}:{e['data'].get('phase', '?')}"
+        for e in events
+        if e.get("type") == "fault" and isinstance(e.get("data"), dict))
+
     # Planner decisions.
     plan_counts = Counter(e.get("data", {}).get("cause", e["type"])
                           for e in events
@@ -85,6 +115,8 @@ def run_report(events: Iterable[dict]) -> dict:
                   for (track, name), stat in sorted(
                       spans.items(), key=lambda kv: -kv[1]["total_s"])},
         "rounds": round_summary,
+        "availability": availability,
+        "faults": dict(faults),
         "plans": dict(plan_counts),
         "counters": counters,
         "compiles_seen": max(compiles) if compiles else 0,
@@ -109,6 +141,22 @@ def format_report(rep: dict) -> str:
                          f"{r['loss_last']:.4f}")
         sched = ", ".join(f"{k}x{n}" for k, n in r["schedule_counts"].items())
         lines.append(f"    schedule (tau1,tau2): {sched}")
+
+    if rep.get("availability"):
+        a = rep["availability"]
+        lines.append(
+            f"  availability: {a['rounds_degraded']}/{a['rounds_tracked']} "
+            f"rounds degraded, mean active nodes "
+            f"{a['mean_active_nodes']:.2f}, mean masked edges "
+            f"{a['mean_masked_edges']:.2f}")
+        for name in ("full", "degraded"):
+            key = f"loss_delta_{name}"
+            if key in a:
+                lines.append(f"    loss delta over {name} rounds: "
+                             f"{a[key]:+.4f}")
+    if rep.get("faults"):
+        fl = ", ".join(f"{k}x{n}" for k, n in sorted(rep["faults"].items()))
+        lines.append(f"  faults: {fl}")
 
     if rep.get("plans"):
         plans = ", ".join(f"{k}={n}" for k, n in sorted(rep["plans"].items()))

@@ -34,6 +34,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.compression import Compressor
+from repro.planner.bounds import Availability
 from repro.planner.cost import (ComputeModel, CostModel, CostProcess,
                                LinkModel, WirelessLinks)
 from repro.planner.optimize import (Budget, DEFAULT_GRID, Plan,
@@ -101,6 +102,12 @@ class AdaptiveController:
         self.spent_s = 0.0
         self.spent_bits = 0.0
         self.spent_j = 0.0
+        # sporadic-participation tallies (observe_participation)
+        self.resume_tau2 = 1.0
+        self._node_up = 0
+        self._node_total = 0
+        self._edge_up = 0
+        self._edge_total = 0
         self.history: List[dict] = []   # one dict per (re)plan event
         self._telemetry = telemetry     # optional repro.obs.Telemetry sink
         self.current: Optional[Plan] = None
@@ -113,6 +120,9 @@ class AdaptiveController:
                   compressors=self.compressors, gamma=self.gamma, L=self.L)
         if self.grid is not None:
             kw["grid"] = self.grid
+        avail = self.availability()
+        if avail is not None:
+            kw["availability"] = avail
         return kw
 
     def _remaining_budget(self) -> Optional[Budget]:
@@ -224,6 +234,34 @@ class AdaptiveController:
         # equals summing the rounds.
         self.spent_j += self.cost_model.round_cost(
             t1_sum, t2_sum, comp).energy_j
+
+    def observe_participation(self, node_mask, edge_mask) -> None:
+        """Tally one round's realized participation (the [N]/[E] masks of
+        a sporadic round, or the ``active_nodes``/``masked_edges`` counts
+        already reduced by the executor — any 0/1 array-likes work). The
+        running rates feed ``availability()``, which every subsequent
+        (re)plan prices schedules with."""
+        nm = np.asarray(node_mask).ravel()
+        em = np.asarray(edge_mask).ravel()
+        self._node_up += int(nm.sum())
+        self._node_total += int(nm.size)
+        self._edge_up += int(em.sum())
+        self._edge_total += int(em.size)
+
+    def availability(self) -> Optional[Availability]:
+        """The estimated sporadic-participation rates, or None while no
+        participation has been observed (or it has been full — the exact
+        Prop-1 formulas then apply unmodified)."""
+        if self._node_total == 0 and self._edge_total == 0:
+            return None
+        node_rate = (self._node_up / self._node_total
+                     if self._node_total else 1.0)
+        edge_rate = (self._edge_up / self._edge_total
+                     if self._edge_total else 1.0)
+        avail = Availability(node_rate=min(node_rate, 1.0),
+                             edge_rate=min(edge_rate, 1.0),
+                             resume_tau2=self.resume_tau2)
+        return None if avail.is_full else avail
 
     def spend_overhead(self, seconds: float) -> None:
         """Charge one-off wall-clock (executor warmup compiles, stalls) to

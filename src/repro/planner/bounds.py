@@ -33,6 +33,9 @@ __all__ = [
     "choco_gamma_star",
     "cdfl_contraction",
     "effective_zeta",
+    "Availability",
+    "expected_mixing",
+    "sporadic_zeta",
 ]
 
 
@@ -111,6 +114,75 @@ def bound_20(eta: float, tau1: int, tau2: int, topo: Topology, T: int,
 
 
 @dataclasses.dataclass(frozen=True)
+class Availability:
+    """Sporadic-participation rates for planning degraded rounds.
+
+    node_rate / edge_rate: the fraction of nodes doing local updates and
+    of edges carrying gossip in a typical round (estimated online by
+    ``planner.adaptive.AdaptiveController.observe_participation`` or read
+    off a ``repro.faults.FaultPlan``).
+
+    resume_tau2: how many gossip steps a round is EXPECTED to run once
+    connectivity returns (>= its long-run average). It is the drift
+    credit for pricing a tau2 = 0 outage round: instead of the
+    paper-faithful infinite bound (a standing never-gossip schedule),
+    the sporadic bound charges the round the drift of a schedule that
+    gossips ``resume_tau2`` steps per round — finite, so the planner can
+    RANK compute-only candidates by how much drift they bank rather
+    than falling through to the tie-break.
+    """
+
+    node_rate: float = 1.0
+    edge_rate: float = 1.0
+    resume_tau2: float = 1.0
+
+    def __post_init__(self):
+        for name in ("node_rate", "edge_rate"):
+            v = getattr(self, name)
+            if not (0.0 <= v <= 1.0):
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if self.resume_tau2 < 0.0:
+            raise ValueError(
+                f"resume_tau2 must be >= 0, got {self.resume_tau2}")
+
+    @property
+    def is_full(self) -> bool:
+        return self.node_rate >= 1.0 and self.edge_rate >= 1.0
+
+
+def expected_mixing(topology: Topology, edge_rate: float) -> np.ndarray:
+    """E[C_masked] under i.i.d. Bernoulli(edge_rate) edge participation.
+
+    Each off-diagonal weight survives w.p. ``edge_rate``; a masked edge's
+    weight folds onto BOTH endpoints' diagonals
+    (``core.mixing.masked_mixing_matrix``), so in expectation the
+    diagonal absorbs the complementary mass and the matrix stays
+    symmetric doubly stochastic.
+    """
+    if not (0.0 <= edge_rate <= 1.0):
+        raise ValueError(f"edge_rate must be in [0, 1], got {edge_rate}")
+    cm = np.asarray(topology.mixing, dtype=np.float64)
+    off = cm - np.diag(np.diag(cm))
+    exp = off * edge_rate
+    return exp + np.diag(1.0 - exp.sum(axis=0))
+
+
+def sporadic_zeta(topology: Topology, edge_rate: float) -> float:
+    """zeta of the EXPECTED masked mixing matrix: the planning-grade
+    mixing parameter of sporadic gossip (slower mixing as edges drop;
+    exact spectral zeta at edge_rate = 1). Heuristic in the same spirit
+    as ``effective_zeta`` — E[zeta(C_masked)] >= zeta(E[C_masked]) by
+    convexity, so this flatters mixing slightly; it ranks schedules, it
+    does not certify them.
+    """
+    if topology.num_nodes <= 1:
+        return 0.0
+    from repro.core.topology import zeta as spectral_zeta
+    return float(min(1.0, spectral_zeta(expected_mixing(topology,
+                                                        edge_rate))))
+
+
+@dataclasses.dataclass(frozen=True)
 class BoundEval:
     """One evaluation of the planning objective: the value, its eta, and
     the three terms (optimization / statistical / local-drift)."""
@@ -137,6 +209,7 @@ def predicted_loss_decrement(
     compressor: Optional[Compressor] = None,
     gamma: float = 1.0,
     model_dim: int = 1024,
+    availability: Optional[Availability] = None,
 ) -> BoundEval:
     """The planner's objective: bound (20) sharpened for prediction.
 
@@ -158,6 +231,18 @@ def predicted_loss_decrement(
     With a ``compressor`` the mixing parameter is degraded to
     ``effective_zeta`` (CHOCO gossip mixes slower per step; Prop. 2's
     mechanism) — a planning heuristic rather than a proved bound.
+
+    With an ``availability`` (the sporadic-participation regime) three
+    further planning-grade adjustments apply, all degenerating to the
+    exact formulas at full participation:
+
+      * mixing degrades to ``sporadic_zeta`` (the zeta of the expected
+        masked mixing matrix) — never better than the exact zeta;
+      * descent iterations and the variance-averaging population scale
+        by ``node_rate`` (only participating nodes step / contribute);
+      * a tau2 = 0 round is charged the drift of a schedule gossiping
+        ``resume_tau2`` steps per round instead of going infinite, so
+        outage rounds are RANKED by drift credit (see ``Availability``).
     """
     n = topology.num_nodes if n is None else n
     if compressor is None:
@@ -165,26 +250,39 @@ def predicted_loss_decrement(
     else:
         z = effective_zeta(topology, delta=compressor.delta(model_dim),
                            gamma=gamma)
-    t_descent = T * tau1 / (tau1 + tau2)
-    if T <= 0 or t_descent <= 0 or z >= 1.0 or (tau2 == 0 and n > 1):
+    avail = availability
+    if avail is not None and avail.is_full:
+        avail = None
+    if avail is not None and avail.edge_rate < 1.0 and n > 1:
+        z = float(min(1.0 - 1e-12,
+                      max(z, sporadic_zeta(topology, avail.edge_rate))))
+    node_rate = 1.0 if avail is None else max(avail.node_rate, 1.0 / n)
+    tau2_eff: float = float(tau2)
+    if tau2 == 0 and avail is not None and avail.resume_tau2 > 0.0:
+        tau2_eff = float(avail.resume_tau2)
+    t_descent = T * tau1 / (tau1 + tau2) * node_rate
+    if T <= 0 or t_descent <= 0 or z >= 1.0 or (tau2_eff == 0 and n > 1):
         # tau2 = 0 on a non-complete graph: a standing never-gossip
-        # schedule has unbounded drift. It stays a valid LAST-RESORT grid
-        # point for per-round trajectory planning (an outage round that
-        # only computes): with every bound infinite, ``select_plan``'s
-        # deterministic tie-break (round time, then taus) chooses among
-        # the compute-only candidates.
+        # schedule has unbounded drift. Without an availability's drift
+        # credit it stays a valid LAST-RESORT grid point for per-round
+        # trajectory planning (an outage round that only computes): with
+        # every bound infinite, ``select_plan``'s deterministic tie-break
+        # (round time, then taus) chooses among the compute-only
+        # candidates.
         return BoundEval(bound=float("inf"), eta=float(eta or 0.0),
                          opt_term=float("inf"), stat_term=0.0,
                          drift_term=0.0, zeta=z)
+    n_eff = n * node_rate
     drift_coeff = 2 * L**2 * sigma**2 * (
-        tau1 / (1 - z ** (2 * tau2)) - 1 if z > 0 else tau1 - 1)
+        tau1 / (1 - z ** (2 * tau2_eff)) - 1 if z > 0 else tau1 - 1)
 
     def terms(e: float):
-        return (2 * f_gap / (e * t_descent), e * L * sigma**2 / n,
+        return (2 * f_gap / (e * t_descent), e * L * sigma**2 / n_eff,
                 e**2 * drift_coeff)
 
     if eta is None:
-        emax = max_eta_19(tau1, tau2, topology, L, zeta=z)
+        emax = max_eta_19(tau1, tau2 if tau2 > 0 else tau2_eff, topology,
+                          L, zeta=z)
         cands = emax * np.logspace(-3.0, 0.0, 64)
         eta = float(min(cands, key=lambda e: sum(terms(e))))
     elif eta <= 0.0:

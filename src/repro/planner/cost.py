@@ -132,14 +132,26 @@ class WirelessLinks:
         key = (min(i, j), max(i, j))
         return self.per_edge.get(key, self.default)
 
-    def gossip_time(self, topology: Topology, copy_bytes: float) -> float:
-        """Time of one gossip step shipping ``copy_bytes`` per neighbor."""
+    def gossip_time(self, topology: Topology, copy_bytes: float,
+                    active_edges: Optional[Sequence[Tuple[int, int]]] = None,
+                    ) -> float:
+        """Time of one gossip step shipping ``copy_bytes`` per neighbor.
+
+        ``active_edges``: optional undirected edge subset actually carrying
+        traffic this step (a sporadic round's unmasked edges) — masked
+        edges ship nothing and so never gate the step, which is exactly
+        why a sporadic round is cheaper than a blocking round waiting on
+        an outage tariff.
+        """
         if self.concurrency not in ("parallel", "serial"):
             raise ValueError(f"unknown concurrency {self.concurrency!r}")
+        act = (None if active_edges is None else
+               {(min(i, j), max(i, j)) for (i, j) in active_edges})
         per_node = []
         for i, nbrs in enumerate(topology.neighbors):
             times = [self.link(i, j).t_transfer(copy_bytes)
-                     for (j, _w) in nbrs]
+                     for (j, _w) in nbrs
+                     if act is None or (min(i, j), max(i, j)) in act]
             if not times:
                 per_node.append(0.0)
             elif self.concurrency == "serial":
@@ -148,12 +160,17 @@ class WirelessLinks:
                 per_node.append(max(times))
         return max(per_node, default=0.0)
 
-    def gossip_energy(self, topology: Topology, copy_bytes: float) -> float:
+    def gossip_energy(self, topology: Topology, copy_bytes: float,
+                      active_edges: Optional[Sequence[Tuple[int, int]]] = None,
+                      ) -> float:
         """Per-node mean energy of one gossip step (receive side)."""
         n = max(topology.num_nodes, 1)
+        act = (None if active_edges is None else
+               {(min(i, j), max(i, j)) for (i, j) in active_edges})
         total = sum(
             self.link(i, j).energy_transfer(copy_bytes)
-            for i, nbrs in enumerate(topology.neighbors) for (j, _w) in nbrs)
+            for i, nbrs in enumerate(topology.neighbors) for (j, _w) in nbrs
+            if act is None or (min(i, j), max(i, j)) in act)
         return total / n
 
 
@@ -233,6 +250,55 @@ class CostModel:
             time_s=tau1 * t_c + comm_time,
             wire_bits=tau2 * self.gossip_bits_per_step(compressor),
             energy_j=tau1 * self.compute.energy_step + tau2 * e_g,
+            t_compute_step=t_c,
+            t_gossip_step=t_g,
+            _comm_time=comm_time,
+        )
+
+    def masked_round_cost(
+        self, tau1: int, tau2: int,
+        compressor: Optional[Compressor] = None,
+        *,
+        active_nodes: Optional[Sequence[int]] = None,
+        active_edges: Optional[Sequence[Tuple[int, int]]] = None,
+    ) -> RoundCost:
+        """Price a SPORADIC round over its realized participation.
+
+        A masked node skips its local steps; a masked edge ships nothing
+        (its ppermute still runs, but the accumulation weight is zero —
+        nothing crosses the wire). Deployment truth for the round is
+        therefore: compute time 0 when every node is masked, gossip time
+        gated only by the ACTIVE edges, wire/energy counted only on
+        active traffic. This is why the sporadic engine beats a blocking
+        baseline at equal deployment-clock budget: the blocking round
+        pays the outage tariff (``edge_outage`` residual-rate links) on
+        the very edges the sporadic round simply drops.
+        """
+        n_active = (self.topology.num_nodes if active_nodes is None
+                    else len(set(active_nodes)))
+        act = (None if active_edges is None else
+               [(min(i, j), max(i, j)) for (i, j) in active_edges])
+        t_c = self.compute.t_step if n_active > 0 else 0.0
+        copy_bytes = (self.model_bits * self.compression_ratio(compressor)
+                      / 8.0)
+        wl = _as_wireless(self.link)
+        t_g = wl.gossip_time(self.topology, copy_bytes, active_edges=act)
+        e_g = wl.gossip_energy(self.topology, copy_bytes, active_edges=act)
+        if act is None:
+            bits_step = self.gossip_bits_per_step(compressor)
+        else:
+            # each active undirected edge delivers one copy per direction;
+            # per-node mean received copies = 2|E_active| / N
+            n = max(self.topology.num_nodes, 1)
+            bits_step = (2.0 * len(set(act)) / n
+                         * self.model_bits
+                         * self.compression_ratio(compressor))
+        comm_time = tau2 * t_g
+        frac = n_active / max(self.topology.num_nodes, 1)
+        return RoundCost(
+            time_s=tau1 * t_c + comm_time,
+            wire_bits=tau2 * bits_step,
+            energy_j=(tau1 * self.compute.energy_step * frac + tau2 * e_g),
             t_compute_step=t_c,
             t_gossip_step=t_g,
             _comm_time=comm_time,

@@ -18,7 +18,8 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.compression import Compressor
-from repro.planner.bounds import BoundEval, predicted_loss_decrement
+from repro.planner.bounds import (Availability, BoundEval,
+                                  predicted_loss_decrement)
 from repro.planner.cost import CostModel, CostProcess, RoundCost
 
 __all__ = [
@@ -102,8 +103,14 @@ def evaluate_grid(
     gamma: float = 1.0,
     L: float = 1.0,
     eta: Optional[float] = None,
+    availability: Optional[Availability] = None,
 ) -> List[Plan]:
-    """Every feasible candidate as a Plan, in grid order (for tables)."""
+    """Every feasible candidate as a Plan, in grid order (for tables).
+
+    ``availability``: sporadic-participation rates forwarded to
+    ``bounds.predicted_loss_decrement`` — degraded mixing, node-rate-scaled
+    descent, and the tau2 = 0 drift credit that ranks outage rounds.
+    """
     topo = cost_model.topology
     model_dim = max(int(round(cost_model.model_bits / 32.0)), 1)
     out: List[Plan] = []
@@ -117,7 +124,7 @@ def evaluate_grid(
             ev = predicted_loss_decrement(
                 t1, t2, topo, sigma, T=T, f_gap=f_gap, L=L, eta=eta,
                 compressor=comp, gamma=gamma,
-                model_dim=model_dim)
+                model_dim=model_dim, availability=availability)
             out.append(Plan(tau1=t1, tau2=t2, compressor=comp, eta=ev.eta,
                             rounds=r, total_iters=T,
                             predicted_bound=ev.bound, round_cost=rc,
@@ -151,12 +158,14 @@ def plan(
     gamma: float = 1.0,
     L: float = 1.0,
     eta: Optional[float] = None,
+    availability: Optional[Availability] = None,
 ) -> Plan:
     """The best feasible schedule under ``budget`` by predicted bound
     (``evaluate_grid`` then ``select_plan``)."""
     cands = evaluate_grid(
         budget, cost_model, sigma=sigma, f_gap=f_gap, grid=grid,
-        compressors=compressors, gamma=gamma, L=L, eta=eta)
+        compressors=compressors, gamma=gamma, L=L, eta=eta,
+        availability=availability)
     if not cands:
         raise ValueError(
             f"no (tau1, tau2) grid point affords even one round in {budget}")
@@ -231,6 +240,7 @@ def plan_trajectory(
     gamma: float = 1.0,
     L: float = 1.0,
     eta: Optional[float] = None,
+    availability: Optional[Availability] = None,
     t0: float = 0.0,
 ) -> TrajectoryPlan:
     """A per-round (tau1, tau2, compressor) trajectory of at most
@@ -258,7 +268,7 @@ def plan_trajectory(
     """
     assert rounds >= 1
     kw = dict(sigma=sigma, f_gap=f_gap, grid=grid, compressors=compressors,
-              gamma=gamma, L=L, eta=eta)
+              gamma=gamma, L=L, eta=eta, availability=availability)
     if process.is_static:   # t0 is irrelevant without episodes
         p = plan(budget, process.base, **kw)
         k = min(p.rounds, rounds)

@@ -403,7 +403,7 @@ def test_host_prefetcher_failure_paths():
     pf.mark_stale()
 
     assert pf.stats == {"scheduled": 4, "taken": 2, "cancelled": 1,
-                        "stale": 1, "errors": 1}
+                        "stale": 1, "errors": 1, "retries": 0}
     types = [e["type"] for e in tel.events]
     assert types.count("prefetch") >= 5   # 4 builds + cancel/stale instants
 
