@@ -36,9 +36,15 @@ participation variants on the widened ``[K, 2+N+E]`` executor:
 trajectories share one fingerprint — masks are schedule data, never
 trace constants) and **participation-collectives** (the masked
 executable still ships the full shift pair set — masks gate mixing
-weights, not collectives). The individual ``audit_*`` functions are
-pure text analysis, testable on synthetic HLO and deliberately-broken
-fixtures.
+weights, not collectives); plus two overlap variants on the pipelined
+(``overlap="pipeline"``) executor: **overlap-recompile** (the
+double-buffered superstep keeps one fingerprint across trajectories —
+the in-flight carry must not bake a tau into the trace) and
+**overlap-collectives** (the pipelined executable, drain included,
+still ships exactly ``Topology.shifts()`` — overlap moves the exchange
+one round later, never onto different wires). The individual
+``audit_*`` functions are pure text analysis, testable on synthetic
+HLO and deliberately-broken fixtures.
 """
 from __future__ import annotations
 
@@ -247,7 +253,8 @@ def audit_telemetry_neutrality(bare_text: str, instrumented_text: str,
 
 def build_audit_executor(num_nodes: int = 8, *, tau1_max: int = 3,
                          tau2_max: int = 2, rounds: int = 2, dim: int = 33,
-                         telemetry=None, participation: bool = False):
+                         telemetry=None, participation: bool = False,
+                         overlap: str = "none"):
     """A small but REAL sparse-engine superstep: ring(N) topology, node
     axis manual over an N-device mesh, dynamic taus, donated carry — the
     exact executable class ``launch.train`` dispatches. Returns
@@ -277,7 +284,8 @@ def build_audit_executor(num_nodes: int = 8, *, tau1_max: int = 3,
 
     ex = RoundExecutor(cfg, loss_fn, opt, engine="sparse", mesh=mesh,
                        node_axes=("data",), dynamic=True, donate=True,
-                       telemetry=telemetry, participation=participation)
+                       telemetry=telemetry, participation=participation,
+                       overlap=overlap)
     state = init_state({"w": jnp.zeros((dim,))}, num_nodes, opt,
                        jax.random.key(0))
     sh = NamedSharding(mesh, P("data"))
@@ -293,7 +301,8 @@ def build_audit_executor(num_nodes: int = 8, *, tau1_max: int = 3,
 
 
 def run_production_audits(num_nodes: int = 8) -> List[AuditResult]:
-    """Build the production sparse superstep and run all four audits."""
+    """Build the production sparse superstep (plus its participation and
+    pipelined-overlap variants) and run the full audit suite."""
     import jax
 
     from repro.obs import Telemetry
@@ -340,6 +349,18 @@ def run_production_audits(num_nodes: int = 8) -> List[AuditResult]:
                                      crash.mask_trajectory(taus))
     low_spor = ex_p.lower_superstep(state_p, batches_p,
                                     sporadic.mask_trajectory(taus))
+
+    # Overlap: the pipelined superstep is still schedule-as-data — one
+    # fingerprint across trajectories (the double-buffer carry must not
+    # smuggle a tau into the trace as a constant) — and its executable
+    # still ships exactly the topology's shift pairs (pipelining moves
+    # the exchange one round LATER, it must not move it onto different
+    # wires or drop the drain's final exchange).
+    ex_o, state_o, batches_o, _ = build_audit_executor(
+        num_nodes, overlap="pipeline")
+    low_oa = ex_o.lower_superstep(state_o, batches_o, taus_a)
+    low_ob = ex_o.lower_superstep(state_o, batches_o, taus_b)
+
     return [
         audit_donation(compiled_text, leaf_names),
         audit_recompile([low_a.as_text(), low_b.as_text()],
@@ -352,4 +373,9 @@ def run_production_audits(num_nodes: int = 8) -> List[AuditResult]:
             name="participation-recompile"),
         audit_collective_matching(low_crash.compile().as_text(), topo,
                                   name="participation-collectives"),
+        audit_recompile([low_oa.as_text(), low_ob.as_text()],
+                        labels=["taus=[[1,1],[1,1]]", "taus=[[3,0],[2,2]]"],
+                        name="overlap-recompile"),
+        audit_collective_matching(low_oa.compile().as_text(), topo,
+                                  name="overlap-collectives"),
     ]

@@ -63,7 +63,13 @@ __all__ = [
     "average_model",
     "consensus_distance",
     "init_state",
+    "local_phase",
+    "gossip_phase",
+    "round_keys",
     "make_round_fn",
+    "make_pipeline_fns",
+    "pipeline_round_body",
+    "pipeline_drain_body",
     "round_wire_bits",
 ]
 
@@ -355,6 +361,49 @@ def round_keys(rng: jax.Array, round_idx) -> Tuple[jax.Array, jax.Array]:
     return jax.random.fold_in(round_key, 0), jax.random.fold_in(round_key, 1)
 
 
+def local_phase(
+    cfg: DFLConfig, loss_fn: LossFn, opt, sub: NodeSubstrate,
+    params: PyTree, opt_state: PyTree, local_key: jax.Array, batches: PyTree,
+    constrain=None, tau1=None, node_mask=None,
+) -> Tuple[PyTree, PyTree, jnp.ndarray]:
+    """Stage 1 of a round: tau1 local SGD steps (Alg. 1 l.4).
+
+    Thin named wrapper over ``_local_updates`` so callers (the overlapped
+    executor, tests' pure-Python references) can compose the two round
+    stages explicitly. ``node_mask`` is the substrate-LOCAL participation
+    view (``sub.node_mask_local``). Returns (params', opt_state',
+    mean_loss).
+    """
+    constrain = constrain or (lambda t: t)
+    return _local_updates(cfg, loss_fn, opt, sub, params, opt_state,
+                          local_key, batches, constrain, tau1=tau1,
+                          node_mask=node_mask)
+
+
+def gossip_phase(
+    cfg: DFLConfig, sub: NodeSubstrate, params: PyTree, hat: Optional[PyTree],
+    comm_key: jax.Array, round_idx, constrain=None, tau2=None, edge_mask=None,
+) -> Tuple[PyTree, Optional[PyTree]]:
+    """Stage 2 of a round: tau2 gossip steps (Alg. 1 l.6 / Alg. 2 l.6-11).
+
+    Plain DFL mixes ``params`` and re-asserts ``constrain``; C-DFL runs the
+    CHOCO-G error-feedback iteration over (params, hat). Returns
+    (params', hat') with hat' = None on the plain path. The exchange this
+    stage issues belongs to round ``round_idx`` (topology-schedule branch
+    selection and the comm-key derivation agree on that index).
+    """
+    constrain = constrain or (lambda t: t)
+    if cfg.is_compressed:
+        assert hat is not None, "C-DFL needs init_state(..., compressed=True)"
+        params, hat = _communicate_choco(cfg, params, hat, comm_key, sub,
+                                         tau2=tau2, edge_mask=edge_mask)
+    else:
+        params = _communicate_plain(cfg, sub, params, round_idx, tau2=tau2,
+                                    edge_mask=edge_mask)
+        params = constrain(params)
+    return params, hat
+
+
 def round_body(
     cfg: DFLConfig, loss_fn: LossFn, opt, sub: NodeSubstrate,
     params: PyTree, opt_state: PyTree, hat: Optional[PyTree],
@@ -390,17 +439,11 @@ def round_body(
     else:
         mask_local = edge_mask = None
     local_key, comm_key = round_keys(rng, round_idx)
-    params, opt_state, mean_loss = _local_updates(
+    params, opt_state, mean_loss = local_phase(
         cfg, loss_fn, opt, sub, params, opt_state, local_key, batches,
         constrain, tau1=tau1, node_mask=mask_local)
-    if cfg.is_compressed:
-        assert hat is not None, "C-DFL needs init_state(..., compressed=True)"
-        params, hat = _communicate_choco(cfg, params, hat, comm_key, sub,
-                                         tau2=tau2, edge_mask=edge_mask)
-    else:
-        params = _communicate_plain(cfg, sub, params, round_idx, tau2=tau2,
-                                    edge_mask=edge_mask)
-        params = constrain(params)
+    params, hat = gossip_phase(cfg, sub, params, hat, comm_key, round_idx,
+                               constrain, tau2=tau2, edge_mask=edge_mask)
     metrics = {
         "loss": mean_loss,
         "consensus_sq": sub.consensus_sq(params),
@@ -505,6 +548,188 @@ def make_round_fn(
             return body(state, batches, None)
 
     return round_fn
+
+
+def pipeline_round_body(
+    cfg: DFLConfig, loss_fn: LossFn, opt, sub: NodeSubstrate,
+    params: PyTree, opt_state: PyTree, hat: Optional[PyTree],
+    rng: jax.Array, round_idx, buf: PyTree, have, tau1, prev_tau2,
+    batches: PyTree, constrain=None, node_mask=None, prev_edge_mask=None,
+) -> Tuple[PyTree, PyTree, Optional[PyTree], PyTree, dict]:
+    """One OVERLAPPED round: round k's local phase plus the one-round-stale
+    fold of round k-1's gossip exchange (``overlap="pipeline"``).
+
+    Dataflow (k = the round at ``round_idx``)::
+
+        z_k = local_phase(p_k, batches_k)            # round k's tau1 steps
+        g   = gossip_phase(buf = z_{k-1}, ...)       # round k-1's exchange,
+                                                     #   INDEPENDENT of z_k
+        p_{k+1} = z_k + (g - z_{k-1})                # fold one round late
+
+    Because ``g`` depends only on the carried buffer, the tau2 ppermute
+    exchange of round k-1 and the tau1 local updates of round k are
+    independent in the compiled dataflow — the scheduler may issue the
+    collective before/under the compute (the overlap the planner's
+    ``max(0, tau2*T_gossip - overlap_window)`` round-time model prices).
+    The cost is one round of mixing staleness: the delayed-mixing regime
+    priced by ``planner.bounds.stale_mixing_zeta``.
+
+    The stale exchange uses round k-1's comm key, trip count
+    (``prev_tau2``) and edge mask, so a pipelined run applies exactly the
+    same gossip operators as the legacy run, each one round later.
+    ``have`` is a traced 0/1 scalar: 0 on the first scan iteration, where
+    the exchange still runs (collective matching / mask-independence) but
+    its fold is discarded bitwise. CHOCO's shared estimates ride the gossip
+    chain sequentially (hat is only ever advanced by exchanges), so they
+    need no extra buffer — just the same discard on iteration 0.
+
+    Returns (params', opt_state', hat', buf'=z_k, metrics). The loss
+    metric is round k's; ``consensus_sq`` is measured on the folded params.
+    """
+    constrain = constrain or (lambda t: t)
+    if node_mask is not None:
+        mask_local = sub.node_mask_local(node_mask)
+    else:
+        mask_local = None
+    local_key, _ = round_keys(rng, round_idx)
+    _, stale_comm_key = round_keys(rng, round_idx - 1)
+    z, opt_state, mean_loss = local_phase(
+        cfg, loss_fn, opt, sub, params, opt_state, local_key, batches,
+        constrain, tau1=tau1, node_mask=mask_local)
+    g, hat_g = gossip_phase(cfg, sub, buf, hat, stale_comm_key,
+                            round_idx - 1, constrain, tau2=prev_tau2,
+                            edge_mask=prev_edge_mask)
+    keep = have != 0
+    params = jax.tree_util.tree_map(
+        lambda zl, gl, bl: jnp.where(keep, (zl + (gl - bl)).astype(zl.dtype),
+                                     zl), z, g, buf)
+    params = constrain(params)
+    if cfg.is_compressed:
+        hat = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(keep, a, b), hat_g, hat)
+    metrics = {
+        "loss": mean_loss,
+        "consensus_sq": sub.consensus_sq(params),
+    }
+    return params, opt_state, hat, z, metrics
+
+
+def pipeline_drain_body(
+    cfg: DFLConfig, sub: NodeSubstrate, params: PyTree, hat: Optional[PyTree],
+    rng: jax.Array, round_idx, buf: PyTree, prev_tau2, constrain=None,
+    prev_edge_mask=None,
+) -> Tuple[PyTree, Optional[PyTree]]:
+    """Retire the in-flight exchange after a pipelined scan.
+
+    ``round_idx`` is the POST-scan counter, so the outstanding exchange
+    belongs to round ``round_idx - 1`` (its comm key / trip count / edge
+    mask). Runs in the same executable as the scan, so a dispatched
+    superstep always returns fully-drained state: no gossip crosses a
+    superstep / checkpoint / restore boundary.
+    """
+    constrain = constrain or (lambda t: t)
+    _, stale_comm_key = round_keys(rng, round_idx - 1)
+    g, hat = gossip_phase(cfg, sub, buf, hat, stale_comm_key, round_idx - 1,
+                          constrain, tau2=prev_tau2,
+                          edge_mask=prev_edge_mask)
+    params = jax.tree_util.tree_map(
+        lambda pl, gl, bl: (pl + (gl - bl)).astype(pl.dtype), params, g, buf)
+    params = constrain(params)
+    return params, hat
+
+
+def make_pipeline_fns(
+    cfg: DFLConfig, loss_fn: LossFn, opt, constrain=None, *,
+    engine: str = "dense", mesh=None, node_axes: Sequence[str] = ("data",),
+    use_kernels: bool = False, participation: bool = False,
+) -> Tuple[Callable[..., Tuple[DFLState, PyTree, dict]],
+           Callable[..., DFLState]]:
+    """Build the jittable pipelined-round pair for either engine
+    (``overlap="pipeline"``; the executor scans ``pipe_fn`` and calls
+    ``drain_fn`` once after the scan — see
+    ``core.executor.make_pipeline_superstep``).
+
+    Signatures (all step counts / flags are traced int32)::
+
+        pipe_fn(state, buf, have, prev_tau2, batches, tau1)
+            -> (state', buf', metrics)                       # plain
+        pipe_fn(state, buf, have, prev_tau2, prev_edge_mask,
+                batches, tau1, node_mask)
+            -> (state', buf', metrics)                       # participation
+        drain_fn(state, buf, prev_tau2[, prev_edge_mask]) -> state'
+
+    The CURRENT round's (tau2, edge_mask) never enter ``pipe_fn``: that
+    exchange is issued one scan iteration later from the carry (the whole
+    point of the pipeline). The pipeline is dynamic-only — cfg.tau1 /
+    cfg.tau2 are the compiled maxima exactly as in the dynamic round path.
+    """
+    if cfg.mixing_impl == "dense_power":
+        raise ValueError(
+            "overlap='pipeline' is dynamic-only: dense_power bakes C^tau2 "
+            "in at trace time (use mixing_impl='dense')")
+    if participation and cfg.topology_schedule:
+        raise ValueError(
+            "participation masks index cfg.topology.edges(); a "
+            "round-varying topology schedule has no stable edge list")
+    if engine == "auto":
+        engine = "sparse" if sparse_engine_eligible(
+            cfg, mesh, node_axes) else "dense"
+    if engine == "sparse":
+        from repro.core.sharded import make_sharded_pipeline_fns
+
+        assert mesh is not None, "sparse engine needs a mesh"
+        return make_sharded_pipeline_fns(cfg, loss_fn, opt, mesh,
+                                         node_axes=node_axes,
+                                         use_kernels=use_kernels,
+                                         participation=participation,
+                                         constrain=constrain)
+    if engine != "dense":
+        raise ValueError(f"unknown engine {engine!r}")
+    sub = DenseSubstrate(cfg.topology)
+
+    def pipe_body(state: DFLState, buf, have, prev_tau2, batches, tau1,
+                  node_mask=None, prev_edge_mask=None):
+        params, opt_state, hat, z, metrics = pipeline_round_body(
+            cfg, loss_fn, opt, sub, state.params, state.opt_state,
+            state.hat_params, state.rng, state.round_idx, buf, have, tau1,
+            prev_tau2, batches, constrain, node_mask=node_mask,
+            prev_edge_mask=prev_edge_mask)
+        state = state._replace(
+            params=params, opt_state=opt_state, hat_params=hat,
+            round_idx=state.round_idx + 1)
+        return state, z, metrics
+
+    def drain_body(state: DFLState, buf, prev_tau2, prev_edge_mask=None):
+        params, hat = pipeline_drain_body(
+            cfg, sub, state.params, state.hat_params, state.rng,
+            state.round_idx, buf, prev_tau2, constrain,
+            prev_edge_mask=prev_edge_mask)
+        return state._replace(params=params, hat_params=hat)
+
+    if participation:
+        def pipe_fn(state, buf, have, prev_tau2, prev_edge_mask, batches,
+                    tau1, node_mask):
+            return pipe_body(state, buf, jnp.asarray(have, jnp.int32),
+                             jnp.asarray(prev_tau2, jnp.int32), batches,
+                             jnp.asarray(tau1, jnp.int32),
+                             node_mask=jnp.asarray(node_mask, jnp.int32),
+                             prev_edge_mask=jnp.asarray(prev_edge_mask,
+                                                        jnp.int32))
+
+        def drain_fn(state, buf, prev_tau2, prev_edge_mask):
+            return drain_body(state, buf, jnp.asarray(prev_tau2, jnp.int32),
+                              prev_edge_mask=jnp.asarray(prev_edge_mask,
+                                                         jnp.int32))
+    else:
+        def pipe_fn(state, buf, have, prev_tau2, batches, tau1):
+            return pipe_body(state, buf, jnp.asarray(have, jnp.int32),
+                             jnp.asarray(prev_tau2, jnp.int32), batches,
+                             jnp.asarray(tau1, jnp.int32))
+
+        def drain_fn(state, buf, prev_tau2):
+            return drain_body(state, buf, jnp.asarray(prev_tau2, jnp.int32))
+
+    return pipe_fn, drain_fn
 
 
 def sparse_engine_eligible(cfg: DFLConfig, mesh,

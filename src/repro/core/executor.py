@@ -59,12 +59,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dfl import DFLConfig, DFLState, make_round_fn
+from repro.core.dfl import (DFLConfig, DFLState, make_pipeline_fns,
+                            make_round_fn)
 
 PyTree = Any
 
 __all__ = ["RoundExecutor", "HostPrefetcher", "MetricsBuffer",
-           "stack_round_batches"]
+           "make_pipeline_superstep", "stack_round_batches"]
 
 
 def stack_round_batches(round_batches: Sequence[PyTree],
@@ -91,6 +92,70 @@ def stack_round_batches(round_batches: Sequence[PyTree],
     return jax.tree_util.tree_map(one, *round_batches)
 
 
+def make_pipeline_superstep(pipe_fn, drain_fn, *, participation: bool = False,
+                            num_nodes: int = 0, num_edges: int = 0,
+                            on_trace: Optional[Callable[[], None]] = None):
+    """Fused K-round scan for ``overlap="pipeline"``.
+
+    The scan carry is ``(state, buf, have, prev_tau2[, prev_edge_mask])``:
+    ``buf`` holds the previous round's post-local params (the payload of
+    the in-flight gossip exchange), ``have`` is 0 only on the first
+    iteration (whose exchange runs but folds to a bitwise no-op), and the
+    previous row's tau2/edge-mask ride the carry so round k's exchange
+    executes — one iteration late — with round k's schedule data. After
+    the scan, ``drain_fn`` retires the final in-flight exchange INSIDE the
+    same executable, so a dispatched superstep always returns fully-drained
+    state (checkpoint/restore never sees gossip in flight).
+
+    ``superstep(state, batches, taus)`` matches the legacy dynamic
+    superstep's signature/row layout exactly, so ``dispatch_trajectory``
+    and the audits drive both modes identically. ``on_trace`` fires once
+    per XLA trace (the executor's compile counter hook).
+    """
+    def superstep(state: DFLState, batches: PyTree, taus):
+        if on_trace is not None:
+            on_trace()
+        n, e = num_nodes, num_edges
+        buf0 = state.params
+        have0 = jnp.zeros((), jnp.int32)
+        pt2_0 = jnp.zeros((), jnp.int32)
+        live = jnp.ones((), jnp.int32)
+
+        if participation:
+            def body(carry, xs):
+                st, buf, have, pt2, pem = carry
+                b, tau = xs
+                st, buf, metrics = pipe_fn(st, buf, have, pt2, pem, b,
+                                           tau[0], tau[2:2 + n])
+                metrics = dict(
+                    metrics,
+                    active_nodes=jnp.sum(tau[2:2 + n]),
+                    masked_edges=jnp.int32(e) - jnp.sum(tau[2 + n:]),
+                    tau1=tau[0], tau2=tau[1])
+                return (st, buf, live, tau[1], tau[2 + n:]), metrics
+
+            pem0 = jnp.ones((e,), jnp.int32)
+            carry0 = (state, buf0, have0, pt2_0, pem0)
+            (st, buf, _, pt2, pem), metrics = jax.lax.scan(
+                body, carry0, (batches, taus))
+            st = drain_fn(st, buf, pt2, pem)
+        else:
+            def body(carry, xs):
+                st, buf, have, pt2 = carry
+                b, tau = xs
+                st, buf, metrics = pipe_fn(st, buf, have, pt2, b, tau[0])
+                return (st, buf, live, tau[1]), dict(
+                    metrics, tau1=tau[0], tau2=tau[1])
+
+            carry0 = (state, buf0, have0, pt2_0)
+            (st, buf, _, pt2), metrics = jax.lax.scan(
+                body, carry0, (batches, taus))
+            st = drain_fn(st, buf, pt2)
+        return st, metrics
+
+    return superstep
+
+
 class RoundExecutor:
     """Compile-once dispatch of DFL rounds and K-round supersteps.
 
@@ -114,6 +179,16 @@ class RoundExecutor:
         the one compiled superstep (zero recompiles, audited).
       donate: donate the DFLState argument of every dispatch (the caller
         must treat the passed-in state as consumed).
+      overlap: ``"none"`` (default) keeps the legacy superstep — the code
+        path is untouched, so it is BITWISE the pre-overlap executor
+        (asserted in tests/test_overlap.py). ``"pipeline"`` double-buffers
+        the scan: round k's tau2 gossip exchange is issued alongside round
+        k+1's tau1 local updates and folded one round late (one-round-stale
+        mixing; see ``core.dfl.pipeline_round_body``), with the final
+        exchange drained inside the same executable so dispatch boundaries
+        never hold gossip in flight. Dynamic mode only. The planner prices
+        the mode via ``CostModel(overlap=...)`` and
+        ``bounds.stale_mixing_zeta``.
       telemetry: optional ``repro.obs.Telemetry`` sink; dispatches emit
         ``superstep`` events and traces emit ``compile`` events on the
         "dispatch" track. Host-side only — never traced into the HLO.
@@ -146,6 +221,7 @@ class RoundExecutor:
         participation: bool = False,
         donate: bool = True,
         telemetry=None,
+        overlap: str = "none",
     ):
         self.cfg = cfg
         self.dynamic = dynamic
@@ -153,6 +229,15 @@ class RoundExecutor:
         self.participation = participation
         self.num_nodes = cfg.topology.num_nodes
         self.num_edges = cfg.topology.num_edges
+        if overlap not in ("none", "pipeline"):
+            raise ValueError(
+                f"unknown overlap mode {overlap!r} (use 'none'|'pipeline')")
+        if overlap == "pipeline" and not dynamic:
+            raise ValueError(
+                "overlap='pipeline' rides the dynamic superstep scan; the "
+                "static fallback has no carry to double-buffer "
+                "(pass dynamic=True)")
+        self.overlap = overlap
         if participation and not dynamic:
             raise ValueError(
                 "participation masks are schedule data on the dynamic "
@@ -169,7 +254,27 @@ class RoundExecutor:
         self.rounds_dispatched = 0
         self._in_warmup = False
         self._static_cache: Dict[Tuple[int, int], Callable] = {}
-        if dynamic:
+        # host-work memo for the dispatch hot path: validated/padded
+        # trajectory rows + their device array, keyed on the raw bytes
+        # (the adaptive controller re-emits unchanged chunks often, and
+        # uniform dispatches always hit after warmup).
+        self._traj_cache: Dict[Any, Tuple[np.ndarray, Any]] = {}
+        if dynamic and overlap == "pipeline":
+            pipe_fn, drain_fn = make_pipeline_fns(
+                cfg, loss_fn, opt, participation=participation,
+                **self._make_kw)
+
+            def _traced():
+                self._trace_count += 1  # fires per trace == per compile
+                self._note_trace("pipeline")
+
+            superstep = make_pipeline_superstep(
+                pipe_fn, drain_fn, participation=participation,
+                num_nodes=self.num_nodes, num_edges=self.num_edges,
+                on_trace=_traced)
+            self._dynamic_fn = jax.jit(
+                superstep, donate_argnums=(0,) if donate else ())
+        elif dynamic:
             round_fn = make_round_fn(cfg, loss_fn, opt, dynamic_taus=True,
                                      participation=participation,
                                      **self._make_kw)
@@ -339,6 +444,33 @@ class RoundExecutor:
             self._static_cache[key] = fn
         return fn
 
+    _TRAJ_CACHE_MAX = 128
+
+    def _prepare_trajectory(self, key, build) -> Tuple[np.ndarray, Any]:
+        """Memoized validation + padding + device transfer of a trajectory.
+
+        ``_check_trajectory``'s numpy validation, the participation-mode
+        all-ones mask padding, and the host->device ``jnp.asarray`` upload
+        together dominate the CPU dispatch floor on micro models (ROADMAP:
+        superstep K=1 was ~20% slower than a static jit). The adaptive
+        controller re-emits unchanged chunks often and uniform dispatches
+        repeat (k, tau1, tau2) forever, so both are keyed here — content
+        bytes for explicit trajectories, the scalar triple for uniform
+        ones — and repeated identical dispatches skip the host work
+        entirely. Bounded FIFO so pathological schedule churn can't grow
+        host memory."""
+        hit = self._traj_cache.get(key)
+        if hit is None:
+            arr = build()
+            # never alias caller memory: the cache key is content bytes,
+            # so an in-place caller mutation must not retro-edit the entry.
+            arr = arr.copy()
+            dev = jnp.asarray(arr) if self.dynamic else None
+            if len(self._traj_cache) >= self._TRAJ_CACHE_MAX:
+                self._traj_cache.pop(next(iter(self._traj_cache)))
+            self._traj_cache[key] = hit = (arr, dev)
+        return hit
+
     def dispatch_trajectory(self, state: DFLState, batches: PyTree,
                             taus) -> Tuple[DFLState, dict]:
         """One fused superstep executing a heterogeneous schedule: round k
@@ -351,30 +483,53 @@ class RoundExecutor:
         fallback splits the trajectory into contiguous uniform segments and
         plays them through the keyed compile cache (one compile per
         distinct (tau1, tau2), as always). Returned metrics are stacked [K]
-        and tagged with the realized per-round ``tau1``/``tau2``."""
+        and tagged with the realized per-round ``tau1``/``tau2``.
+
+        Validation and the schedule's device upload are memoized on the
+        trajectory's content (``_prepare_trajectory``), so re-dispatching
+        an unchanged chunk costs no host-side re-checking."""
         k = jax.tree_util.tree_leaves(batches)[0].shape[0]
-        arr = self._check_trajectory(taus, k)
+        raw = np.asarray(taus, dtype=np.int32)
+        arr, dev = self._prepare_trajectory(
+            (k, raw.shape, raw.tobytes()),
+            lambda: self._check_trajectory(raw, k))
+        return self._dispatch_prepared(state, batches, arr, dev, k)
+
+    def _dispatch_prepared(self, state: DFLState, batches: PyTree,
+                           arr: np.ndarray, dev, k: int):
         self.dispatch_count += 1
         self.rounds_dispatched += k
         if self._tel is None:
-            return self._run_trajectory(state, batches, arr, k)
+            return self._run_trajectory(state, batches, arr, dev, k)
         t0 = self._tel.now()
-        out = self._run_trajectory(state, batches, arr, k)
+        out = self._run_trajectory(state, batches, arr, dev, k)
         # On sync backends (this jaxlib's CPU client) the superstep
         # EXECUTES inside the call, so dur is real device time; on async
         # backends it is enqueue cost and the flush event carries the rest.
         # Warmup dispatches are tagged apart so reports never conflate
         # compile-warming with measured supersteps.
+        dur = self._tel.now() - t0
         prefix = "warmup-superstep" if self._in_warmup else "superstep"
         self._tel.emit("superstep", track="dispatch", name=f"{prefix}-k{k}",
-                       t=t0, dur=self._tel.now() - t0, k=k,
+                       t=t0, dur=dur, k=k,
                        warmup=self._in_warmup, dispatch=self.dispatch_count)
+        if self.overlap == "pipeline" and not self._in_warmup:
+            # the gossip slice riding under the compute slice: the stale
+            # exchange of rounds [0, k) is in flight INSIDE this dispatch
+            # window (drained before it returns), so the overlap track
+            # mirrors the superstep span one level down.
+            self._tel.emit("overlap", track="overlap",
+                           name=f"gossip-inflight-k{k}", t=t0, dur=dur,
+                           mode=self.overlap, k=k,
+                           dispatch=self.dispatch_count)
         return out
 
     def _run_trajectory(self, state: DFLState, batches: PyTree,
-                        arr: np.ndarray, k: int) -> Tuple[DFLState, dict]:
+                        arr: np.ndarray, dev, k: int
+                        ) -> Tuple[DFLState, dict]:
         if self.dynamic:
-            return self._dynamic_fn(state, batches, jnp.asarray(arr))
+            return self._dynamic_fn(
+                state, batches, dev if dev is not None else jnp.asarray(arr))
         # static fallback: contiguous uniform segments, padding rows
         # (which the dynamic layout carries) sliced off per segment.
         parts: List[dict] = []
@@ -399,12 +554,18 @@ class RoundExecutor:
     def dispatch(self, state: DFLState, batches: PyTree, tau1: int,
                  tau2: int) -> Tuple[DFLState, dict]:
         """One K-round fused superstep (K = batches' leading dim) at a
-        uniform (tau1, tau2): the constant-trajectory special case."""
+        uniform (tau1, tau2): the constant-trajectory special case. The
+        broadcast [K, 2] schedule (plus its validation and device upload)
+        is memoized on (k, tau1, tau2) — the steady-state uniform dispatch
+        does no per-call host schedule work at all."""
         tau1, tau2 = self._check_taus(tau1, tau2)
         k = jax.tree_util.tree_leaves(batches)[0].shape[0]
-        return self.dispatch_trajectory(
-            state, batches, np.tile(np.array([[tau1, tau2]], np.int32),
-                                    (k, 1)))
+        arr, dev = self._prepare_trajectory(
+            ("uniform", k, tau1, tau2),
+            lambda: self._check_trajectory(
+                # repro-lint: disable=no-host-coercion-of-device-scalars (dispatch's taus are host ints by API contract — _check_taus already coerced them; this builds the broadcast schedule, it reads no device value)
+                np.tile(np.array([[tau1, tau2]], np.int32), (k, 1)), k))
+        return self._dispatch_prepared(state, batches, arr, dev, k)
 
     def dispatch_round(self, state: DFLState, batches: PyTree, tau1: int,
                        tau2: int) -> Tuple[DFLState, dict]:

@@ -37,7 +37,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import substrate as substrate_lib
-from repro.core.dfl import DFLConfig, DFLState, round_body
+from repro.core.dfl import (DFLConfig, DFLState, pipeline_drain_body,
+                            pipeline_round_body, round_body)
 from repro.core.substrate import ShardedSubstrate
 
 PyTree = Any
@@ -187,3 +188,152 @@ def make_sharded_round_fn(
         return new_state._replace(rng=state.rng), metrics
 
     return round_fn
+
+
+def make_sharded_pipeline_fns(
+    cfg: DFLConfig,
+    loss_fn: Callable,
+    opt,
+    mesh,
+    *,
+    node_axes: Sequence[str] = ("data",),
+    use_kernels: bool = False,
+    participation: bool = False,
+    constrain=None,
+):
+    """Sparse-engine pipelined-round pair behind
+    ``core.dfl.make_pipeline_fns(..., engine="sparse")`` — the shard_map
+    plumbing for ``pipeline_round_body`` / ``pipeline_drain_body``
+    (signatures documented there). The in-flight gossip buffer ``buf`` is a
+    params-like tree sharded over the node axes; ``have`` / ``prev_tau2``
+    and the masks ride REPLICATED (P()) exactly like the dynamic round
+    path's tau scalars, so the stale exchange's per-shift ppermutes stay
+    collectively matched on every scan iteration (including the discarded
+    first one). The base key rides through as None and is re-attached, as
+    in ``make_sharded_round_fn``.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    topo = cfg.topology
+    if constrain is not None:
+        unconstrained = [a for a in mesh.axis_names
+                        if a not in node_axes and mesh.shape[a] > 1]
+        if unconstrained:
+            raise NotImplementedError(
+                "the sparse engine drops the `constrain` sharding "
+                f"re-assertion on its auto (GSPMD) mesh axes "
+                f"{unconstrained} (see make_sharded_round_fn)")
+    assert topo.is_shift_structured(), (
+        f"{topo.name} is not circulant; use the dense engine "
+        "(core.dfl.make_pipeline_fns) for arbitrary topologies")
+    mesh_n = substrate_lib.mesh_axis_size(mesh, tuple(node_axes))
+    assert mesh_n == topo.num_nodes, (
+        f"node mesh axes {tuple(node_axes)} enumerate {mesh_n} devices but "
+        f"{topo.name} has {topo.num_nodes} nodes")
+    node_entry = tuple(node_axes) if len(node_axes) > 1 else node_axes[0]
+    state_specs = DFLState(
+        params=P(node_entry),
+        opt_state=P(node_entry),
+        hat_params=P(node_entry) if cfg.is_compressed else None,
+        rng=P(),
+        round_idx=P(),
+    )
+    buf_spec = P(node_entry)
+    batch_spec = P(None, node_entry)
+    squeeze = lambda t: jax.tree_util.tree_map(lambda x: x[0], t)
+    unsqueeze = lambda t: jax.tree_util.tree_map(lambda x: x[None], t)
+
+    def pipe_body(state: DFLState, buf, have, prev_tau2, batches, tau1,
+                  node_mask=None, prev_edge_mask=None):
+        sub = ShardedSubstrate(topo, node_axes, use_kernels=use_kernels)
+        params, opt_state, hat, z, metrics = pipeline_round_body(
+            cfg, loss_fn, opt, sub,
+            squeeze(state.params),
+            squeeze(state.opt_state),
+            squeeze(state.hat_params) if cfg.is_compressed else None,
+            state.rng, state.round_idx,
+            squeeze(buf), have, tau1, prev_tau2,
+            jax.tree_util.tree_map(lambda x: x[:, 0], batches),
+            constrain, node_mask=node_mask, prev_edge_mask=prev_edge_mask)
+        new_state = DFLState(
+            params=unsqueeze(params),
+            opt_state=unsqueeze(opt_state),
+            hat_params=unsqueeze(hat) if cfg.is_compressed else None,
+            rng=None,  # typed key re-attached outside (see round path)
+            round_idx=state.round_idx + 1,
+        )
+        return new_state, unsqueeze(z), metrics
+
+    def drain_body(state: DFLState, buf, prev_tau2, prev_edge_mask=None):
+        sub = ShardedSubstrate(topo, node_axes, use_kernels=use_kernels)
+        params, hat = pipeline_drain_body(
+            cfg, sub,
+            squeeze(state.params),
+            squeeze(state.hat_params) if cfg.is_compressed else None,
+            state.rng, state.round_idx,
+            squeeze(buf), prev_tau2, constrain,
+            prev_edge_mask=prev_edge_mask)
+        return DFLState(
+            params=unsqueeze(params),
+            opt_state=state.opt_state,
+            hat_params=unsqueeze(hat) if cfg.is_compressed else None,
+            rng=None,
+            round_idx=state.round_idx,
+        )
+
+    pipe_out = (state_specs._replace(rng=None), buf_spec, P())
+    drain_out = state_specs._replace(rng=None)
+
+    if participation:
+        pipe_mapped = substrate_lib.shard_map(
+            lambda st, bf, hv, pt2, pem, b, t1, nm: pipe_body(
+                st, bf, hv, pt2, b, t1, node_mask=nm, prev_edge_mask=pem),
+            mesh,
+            (state_specs, buf_spec, P(), P(), P(), batch_spec, P(), P()),
+            pipe_out, manual_axes=tuple(node_axes), check=False)
+        drain_mapped = substrate_lib.shard_map(
+            lambda st, bf, pt2, pem: drain_body(
+                st, bf, pt2, prev_edge_mask=pem),
+            mesh, (state_specs, buf_spec, P(), P()), drain_out,
+            manual_axes=tuple(node_axes), check=False)
+
+        def pipe_fn(state, buf, have, prev_tau2, prev_edge_mask, batches,
+                    tau1, node_mask):
+            new_state, z, metrics = pipe_mapped(
+                state, buf, jnp.asarray(have, jnp.int32),
+                jnp.asarray(prev_tau2, jnp.int32),
+                jnp.asarray(prev_edge_mask, jnp.int32), batches,
+                jnp.asarray(tau1, jnp.int32),
+                jnp.asarray(node_mask, jnp.int32))
+            return new_state._replace(rng=state.rng), z, metrics
+
+        def drain_fn(state, buf, prev_tau2, prev_edge_mask):
+            new_state = drain_mapped(
+                state, buf, jnp.asarray(prev_tau2, jnp.int32),
+                jnp.asarray(prev_edge_mask, jnp.int32))
+            return new_state._replace(rng=state.rng)
+
+        return pipe_fn, drain_fn
+
+    pipe_mapped = substrate_lib.shard_map(
+        lambda st, bf, hv, pt2, b, t1: pipe_body(st, bf, hv, pt2, b, t1),
+        mesh, (state_specs, buf_spec, P(), P(), batch_spec, P()),
+        pipe_out, manual_axes=tuple(node_axes), check=False)
+    drain_mapped = substrate_lib.shard_map(
+        lambda st, bf, pt2: drain_body(st, bf, pt2),
+        mesh, (state_specs, buf_spec, P()), drain_out,
+        manual_axes=tuple(node_axes), check=False)
+
+    def pipe_fn(state, buf, have, prev_tau2, batches, tau1):
+        new_state, z, metrics = pipe_mapped(
+            state, buf, jnp.asarray(have, jnp.int32),
+            jnp.asarray(prev_tau2, jnp.int32), batches,
+            jnp.asarray(tau1, jnp.int32))
+        return new_state._replace(rng=state.rng), z, metrics
+
+    def drain_fn(state, buf, prev_tau2):
+        new_state = drain_mapped(state, buf,
+                                 jnp.asarray(prev_tau2, jnp.int32))
+        return new_state._replace(rng=state.rng)
+
+    return pipe_fn, drain_fn

@@ -236,6 +236,101 @@ def analyze_compiled(compiled, chips: int) -> Dict[str, Any]:
     }
 
 
+def _as_roofline(obj) -> Roofline:
+    """Coerce an ``analyze_compiled`` result dict (or a Roofline) to a
+    Roofline so the overlap predictor takes either."""
+    if isinstance(obj, Roofline):
+        return obj
+    if isinstance(obj, dict):
+        d = obj.get("roofline", obj)
+        return Roofline(
+            flops=float(d.get("flops", 0.0)),
+            hbm_bytes=float(d.get("hbm_bytes", 0.0)),
+            collective_bytes=float(d.get("collective_bytes", 0.0)),
+            chips=int(d.get("chips", 1)))
+    raise TypeError(f"expected Roofline or analyze_compiled dict, got "
+                    f"{type(obj).__name__}")
+
+
+@dataclasses.dataclass
+class OverlapPrediction:
+    """Predicted round times of a (tau1, tau2) round under both executor
+    overlap modes, from compiled-artifact roofline terms alone.
+
+    additive_s  = tau1*t_local + tau2*t_gossip          (overlap="none")
+    pipelined_s = tau1*t_local + max(0, tau2*t_gossip - tau1*t_local)
+                                                        (overlap="pipeline")
+
+    This is the same max-form model ``planner.cost.CostModel`` prices with
+    — evaluated here from MEASURED per-collective wire bytes (parsed out
+    of the optimized HLO by ``collective_bytes_from_hlo``) and the
+    device's roofline terms, so the win is predicted before a single
+    round runs.
+    """
+
+    t_local_step_s: float
+    t_gossip_step_s: float
+    tau1: int
+    tau2: int
+
+    @property
+    def additive_s(self) -> float:
+        return self.tau1 * self.t_local_step_s + self.tau2 * self.t_gossip_step_s
+
+    @property
+    def pipelined_s(self) -> float:
+        window = self.tau1 * self.t_local_step_s
+        return window + max(0.0, self.tau2 * self.t_gossip_step_s - window)
+
+    @property
+    def hidden_s(self) -> float:
+        return self.additive_s - self.pipelined_s
+
+    @property
+    def speedup(self) -> float:
+        return (self.additive_s / self.pipelined_s
+                if self.pipelined_s > 0.0 else 1.0)
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "t_local_step_s": self.t_local_step_s,
+            "t_gossip_step_s": self.t_gossip_step_s,
+            "tau1": self.tau1,
+            "tau2": self.tau2,
+            "additive_s": self.additive_s,
+            "pipelined_s": self.pipelined_s,
+            "hidden_s": self.hidden_s,
+            "speedup": self.speedup,
+        }
+
+
+def predict_overlap(local_step, gossip_step, tau1: int, tau2: int,
+                    *, t_local_step_s: Optional[float] = None,
+                    ) -> OverlapPrediction:
+    """Predict the overlap="pipeline" win for a (tau1, tau2) round.
+
+    local_step / gossip_step: ``Roofline``s (or ``analyze_compiled``
+    dicts) of ONE lowered local-update step and ONE gossip step — the
+    unit artifacts the launchers already lower (steps.py docstring: XLA
+    counts loop bodies once, so rounds compose analytically from unit
+    steps).
+
+    The local step is priced at its roofline bound max(compute_s,
+    memory_s); the gossip step at its wire time collective_s (measured
+    result bytes of its collective-permutes over the link bandwidth).
+    ``t_local_step_s`` overrides the modeled local-step time with a
+    measured one (the bench calibrates it from wall-clock tau2=0 runs)
+    while keeping the gossip side byte-measured.
+    """
+    rl = _as_roofline(local_step)
+    rg = _as_roofline(gossip_step)
+    tl = (t_local_step_s if t_local_step_s is not None
+          else max(rl.compute_s, rl.memory_s))
+    return OverlapPrediction(t_local_step_s=float(tl),
+                             t_gossip_step_s=float(rg.collective_s),
+                             tau1=int(tau1), tau2=int(tau2))
+
+
 def model_flops_train(active_params: int, tokens: int) -> float:
     """MODEL_FLOPS = 6 * N_active * D for one optimizer step."""
     return 6.0 * active_params * tokens

@@ -446,6 +446,7 @@ def build_train_superstep(
     reduced: bool = False,
     engine: str = "auto",
     use_kernels: bool = False,
+    overlap: str = "none",
 ) -> Built:
     """The fused K-round superstep as a lowerable production artifact.
 
@@ -463,7 +464,18 @@ def build_train_superstep(
     the compile-proof artifact of what
     ``repro.core.executor.RoundExecutor.dispatch_trajectory`` dispatches
     at runtime.
+
+    ``overlap="pipeline"`` lowers the double-buffered variant instead
+    (``dfl.make_pipeline_fns`` scanned by
+    ``executor.make_pipeline_superstep``): round k's gossip exchange is
+    issued alongside round k+1's local phase and folded one round late,
+    with the final in-flight exchange drained inside the same executable.
+    Same signature, same [K, 2] row layout, one-round-stale mixing
+    semantics (docs/ARCHITECTURE.md "Overlapped execution").
     """
+    if overlap not in ("none", "pipeline"):
+        raise ValueError(
+            f"overlap must be 'none' or 'pipeline', got {overlap!r}")
     cfg = arch.reduced if reduced else arch.model
     shape = SHAPES[shape_name]
     compression = kernelize_compressor(compression, use_kernels)
@@ -476,18 +488,27 @@ def build_train_superstep(
         arch, cfg, mesh, mode, n, opt, compressed=dcfg.is_compressed)
     constrain = _make_constrain(state_sh.params)
     engine = select_engine(engine, dcfg, mesh, mode)
-    round_fn = dfl_lib.make_round_fn(
-        dcfg, loss_fn, opt, constrain=constrain, engine=engine, mesh=mesh,
-        node_axes=shard_lib.node_axes_for(mode, mesh),
-        use_kernels=use_kernels, dynamic_taus=True)
+    if overlap == "pipeline":
+        from repro.core.executor import make_pipeline_superstep
 
-    def superstep(state, batches, taus):
-        def body(st, xs):
-            b, tau = xs
-            st, metrics = round_fn(st, b, tau[0], tau[1])
-            return st, dict(metrics, tau1=tau[0], tau2=tau[1])
+        pipe_fn, drain_fn = dfl_lib.make_pipeline_fns(
+            dcfg, loss_fn, opt, constrain=constrain, engine=engine,
+            mesh=mesh, node_axes=shard_lib.node_axes_for(mode, mesh),
+            use_kernels=use_kernels)
+        superstep = make_pipeline_superstep(pipe_fn, drain_fn)
+    else:
+        round_fn = dfl_lib.make_round_fn(
+            dcfg, loss_fn, opt, constrain=constrain, engine=engine,
+            mesh=mesh, node_axes=shard_lib.node_axes_for(mode, mesh),
+            use_kernels=use_kernels, dynamic_taus=True)
 
-        return jax.lax.scan(body, state, (batches, taus))
+        def superstep(state, batches, taus):
+            def body(st, xs):
+                b, tau = xs
+                st, metrics = round_fn(st, b, tau[0], tau[1])
+                return st, dict(metrics, tau1=tau[0], tau2=tau[1])
+
+            return jax.lax.scan(body, state, (batches, taus))
 
     batch_abs, batch_sh = _abstract_batch(arch, cfg, shape, mesh, mode, n,
                                           tau1_max)
@@ -507,7 +528,7 @@ def build_train_superstep(
         "kind": "superstep", "arch": arch.arch_id, "shape": shape_name,
         "mode": mode, "nodes": n, "rounds": rounds,
         "tau1_max": tau1_max, "tau2_max": tau2_max, "engine": engine,
-        "schedule": "trajectory",
+        "schedule": "trajectory", "overlap": overlap,
         "compressed": dcfg.is_compressed,
     }, ctx=_act_policy(mesh, mode, "train"))
 

@@ -140,6 +140,15 @@ def main(argv=None) -> None:
                     choices=["fused", "static"],
                     help="fused: compile-once dynamic-tau executor; "
                          "static: legacy keyed per-(tau1,tau2) compile cache")
+    ap.add_argument("--overlap", default="none",
+                    choices=["none", "pipeline"],
+                    help="superstep execution: 'pipeline' double-buffers "
+                         "the scan so round k's gossip exchange overlaps "
+                         "round k+1's local updates and folds in one round "
+                         "late (one-round-stale mixing; the planner prices "
+                         "both the hidden wire time and the staleness "
+                         "penalty); 'none' is the paper-faithful "
+                         "sequential round (bitwise the legacy path)")
     ap.add_argument("--plan-budget", type=float, default=0.0,
                     help="wall-clock budget (s); enables the adaptive "
                          "(tau1, tau2) planner (repro.planner.adaptive)")
@@ -229,6 +238,11 @@ def main(argv=None) -> None:
                          "[K, 2] schedules through the dynamic executor; "
                          "the static keyed cache can't (use --dispatch "
                          "fused)")
+    if args.overlap == "pipeline" and args.dispatch != "fused":
+        raise SystemExit("--overlap pipeline rides the fused superstep "
+                         "scan's double-buffered carry; the static keyed "
+                         "cache has nothing to overlap (use --dispatch "
+                         "fused)")
 
     # Adaptive planner: --plan-budget hands (tau1, tau2) control to
     # repro.planner.adaptive, which re-fits per-step compute/gossip times
@@ -241,8 +255,13 @@ def main(argv=None) -> None:
         model_bits = tree_wire_bits(Identity(), params0)
         # neutral prior: t_compute_step = t_gossip_step = 1 s, with the
         # real topology and model wire size (same accounting as planner).
+        # The executor's overlap mode rides the prior so every (re)plan
+        # prices the max-form round time AND the staleness penalty
+        # (planner.cost / planner.bounds) — the fitted model preserves it
+        # (dataclasses.replace).
         prior = unit_cost_model(topology, 1.0,
-                                rep_dim=max(int(model_bits // 32), 1))
+                                rep_dim=max(int(model_bits // 32), 1),
+                                overlap=args.overlap)
         controller = AdaptiveController(
             Budget(wall_clock_s=args.plan_budget), prior,
             sigma=1.0, f_gap=1.0, replan_every=args.replan_every,
@@ -275,7 +294,8 @@ def main(argv=None) -> None:
         dcfg_max, loss_fn, opt, engine=engine, mesh=mesh,
         node_axes=("nodes",), use_kernels=args.use_kernels,
         dynamic=args.dispatch == "fused",
-        participation=fault_plan is not None, telemetry=tel)
+        participation=fault_plan is not None, telemetry=tel,
+        overlap=args.overlap)
 
     # Wire accounting is DEPLOYMENT cost (what a real DFL network ships:
     # engine="auto" = per-neighbor when circulant), not the host-simulation
@@ -299,7 +319,7 @@ def main(argv=None) -> None:
     print(f"arch={cfg.name} nodes={n} tau=({tau1},{tau2}) "
           f"zeta={topology.zeta:.3f} comp={args.compression or 'none'} "
           f"engine={engine} dispatch={args.dispatch} "
-          f"schedule={schedule_mode} "
+          f"overlap={args.overlap} schedule={schedule_mode} "
           f"superstep={args.superstep} wire={bits/8e6:.1f} MB/round/node")
 
     def round_batch(r: int, t1: int):
@@ -481,8 +501,38 @@ def main(argv=None) -> None:
             # trajectory planned by the controller — the re-plan happens
             # INSIDE the superstep (probe rounds included), not at its
             # boundary, and the realized per-round schedule comes back in the
-            # metrics rows.
+            # metrics rows. Host batch build overlaps the device via the
+            # prefetcher, keyed on the controller's PREDICTED next
+            # trajectory (``predict_trajectory`` runs the exact planning
+            # the next ``next_trajectory`` will commit, so after
+            # ``flush_rows`` the prediction matches unless new overhead
+            # spend shifted the budget — a mismatch rebuilds inline and
+            # counts as a stale take).
+
+            def build_traj_batches(r0: int, t1_rows):
+                """[k, tau1_max, N, B, ...] batches for a [k]-row tau1
+                column (batch content depends only on tau1, not tau2)."""
+                return stack_round_batches(
+                    [round_batch(r0 + i, int(t1))
+                     for i, t1 in enumerate(t1_rows)], tau1_max)
+
+            def tau1_key(r0: int, rows) -> tuple:
+                return (r0, tuple(int(t1) for t1, *_rest in rows))
+
+            def schedule_predicted(r0: int, done: int) -> bool:
+                """Prefetch against the predicted next chunk; False when
+                no further chunk is predicted (end / budget)."""
+                if r0 >= end or controller.exhausted:
+                    return False
+                pred = controller.predict_trajectory(chunk_len(r0, done))
+                if pred is None:
+                    return False
+                prefetch.schedule(build_traj_batches, r0, pred[:, 0],
+                                  meta=tau1_key(r0, pred))
+                return True
+
             r = start_round
+            pending = schedule_predicted(r, rounds_done)
             while r < end:
                 k = chunk_len(r, rounds_done)
                 taus = controller.next_trajectory(k, round_idx=rounds_done)
@@ -499,15 +549,21 @@ def main(argv=None) -> None:
                     executor.warmup(state, dummy_batches(len(taus)))
                     warmed_shapes.add(len(taus))
                     controller.spend_overhead(time.perf_counter() - tw0)
-                # host batch build is real wall-clock the budget pays for
-                # (trajectory mode has no prefetch overlap: the chunk's
-                # schedule is only known now) — charge it as overhead, not as
-                # round time.
+                # host batch build is real wall-clock the budget pays for —
+                # charge the take-stall (or inline rebuild) as overhead,
+                # not as round time.
                 tb0 = time.perf_counter()
-                with tel.span("batch-build", track="prefetch"):
-                    batches = stack_round_batches(
-                        [round_batch(r + i, int(t1))
-                         for i, (t1, _t2) in enumerate(taus)], tau1_max)
+                batches = None
+                if pending:
+                    got, meta = prefetch.take()
+                    if meta == tau1_key(r, taus):
+                        batches = got
+                    else:
+                        prefetch.mark_stale()
+                if batches is None:
+                    span = "stale-rebuild" if pending else "batch-build"
+                    with tel.span(span, track="prefetch"):
+                        batches = build_traj_batches(r, taus[:, 0])
                 controller.spend_overhead(time.perf_counter() - tb0)
                 sched_rows = (fault_plan.mask_trajectory(taus, r)
                               if fault_plan is not None else taus)
@@ -520,6 +576,11 @@ def main(argv=None) -> None:
                 r += len(taus)
                 rounds_done += len(taus)
                 flush_rows()   # every realized round enters the cost fit
+                # predict + schedule the NEXT chunk right after the flush:
+                # the controller state now equals what the next
+                # next_trajectory call will see, so the prediction is
+                # deterministic-identical barring later overhead spend.
+                pending = schedule_predicted(r, rounds_done)
                 emit_counters(r - len(taus), len(taus), opd)
                 if (args.ckpt_every and args.ckpt_dir
                         and r // args.ckpt_every

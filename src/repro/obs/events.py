@@ -48,11 +48,13 @@ __all__ = [
 
 # Schema 2 adds the fault-tolerance vocabulary: ``fault`` (an injected
 # fault window opening/closing) and ``degraded`` (a round that ran with
-# masked nodes/edges — realized participation attached). Schema-1
-# streams stay readable: the new types are additive and every schema-1
-# record is schema-2 valid.
-SCHEMA_VERSION = 2
-KNOWN_SCHEMAS = frozenset({1, 2})
+# masked nodes/edges — realized participation attached). Schema 3 adds
+# ``overlap`` (a pipelined superstep's in-flight gossip slice — rendered
+# on its own track so the trace shows the wire riding under compute).
+# Older streams stay readable: the new types are additive and every
+# schema-1/2 record is schema-3 valid.
+SCHEMA_VERSION = 3
+KNOWN_SCHEMAS = frozenset({1, 2, 3})
 
 # The typed vocabulary. Each type is a kind of thing that happens in a
 # run; anything else is a schema violation (add the type HERE, with its
@@ -72,6 +74,7 @@ EVENT_TYPES = frozenset({
     "counters",    # a counter snapshot attributed to its superstep
     "fault",       # an injected fault window opening or closing (schema 2)
     "degraded",    # a round run with masked nodes/edges (schema 2)
+    "overlap",     # a pipelined superstep's in-flight gossip slice (schema 3)
 })
 
 # Per-type mandatory ``data`` keys (beyond the top-level type/t/track).
@@ -90,6 +93,7 @@ REQUIRED_DATA: Dict[str, Tuple[str, ...]] = {
     "counters": (),
     "fault": ("kind", "phase"),
     "degraded": ("round", "active_nodes", "masked_edges"),
+    "overlap": ("mode", "k"),
 }
 
 

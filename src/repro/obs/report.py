@@ -81,6 +81,18 @@ def run_report(events: Iterable[dict]) -> dict:
         for e in events
         if e.get("type") == "fault" and isinstance(e.get("data"), dict))
 
+    # Overlap (schema 3): pipelined supersteps' in-flight gossip slices —
+    # how much of the run executed with the wire riding under compute.
+    overlap_evs = [e for e in events if e.get("type") == "overlap"]
+    overlap = {}
+    if overlap_evs:
+        overlap = {
+            "supersteps": len(overlap_evs),
+            "mode": (overlap_evs[-1].get("data") or {}).get("mode", "?"),
+            "inflight_s": sum(float(e.get("dur") or 0.0)
+                              for e in overlap_evs),
+        }
+
     # Planner decisions.
     plan_counts = Counter(e.get("data", {}).get("cause", e["type"])
                           for e in events
@@ -116,6 +128,7 @@ def run_report(events: Iterable[dict]) -> dict:
                       spans.items(), key=lambda kv: -kv[1]["total_s"])},
         "rounds": round_summary,
         "availability": availability,
+        "overlap": overlap,
         "faults": dict(faults),
         "plans": dict(plan_counts),
         "counters": counters,
@@ -154,6 +167,12 @@ def format_report(rep: dict) -> str:
             if key in a:
                 lines.append(f"    loss delta over {name} rounds: "
                              f"{a[key]:+.4f}")
+    if rep.get("overlap"):
+        o = rep["overlap"]
+        lines.append(f"  overlap: mode={o['mode']} over {o['supersteps']} "
+                     f"superstep(s), {o['inflight_s']:.3f}s gossip in "
+                     f"flight under compute")
+
     if rep.get("faults"):
         fl = ", ".join(f"{k}x{n}" for k, n in sorted(rep["faults"].items()))
         lines.append(f"  faults: {fl}")

@@ -49,6 +49,7 @@ from repro.planner.bounds import (
     lr_condition_19,
     max_eta_19,
     predicted_loss_decrement,
+    stale_mixing_zeta,
 )
 from repro.planner.optimize import (
     DEFAULT_GRID,
@@ -70,7 +71,7 @@ __all__ = [
     "unit_cost_model", "wireless_link",
     "BoundEval", "bound_20", "cdfl_contraction", "choco_gamma_star",
     "effective_zeta", "lr_condition_19", "max_eta_19",
-    "predicted_loss_decrement",
+    "predicted_loss_decrement", "stale_mixing_zeta",
     "DEFAULT_GRID", "Budget", "Plan", "TrajectoryPlan", "evaluate_grid",
     "plan", "plan_trajectory", "rounds_within", "select_plan",
     "AdaptiveController",

@@ -409,6 +409,77 @@ class AdaptiveController:
         self._emit(round_idx, "replan")
         return new if changed else None
 
+    def _trajectory_candidate(self, k: int):
+        """Compute the next k-round trajectory WITHOUT mutating any
+        controller state: (fitted_cost_model, trajectory_plan, taus,
+        probe) or None when the remaining budget affords no round. Both
+        ``next_trajectory`` (which commits the result) and
+        ``predict_trajectory`` (which only peeks) run exactly this, so a
+        prediction taken between ``observe_chunk`` and the next
+        ``next_trajectory`` call is deterministic-identical to what the
+        controller will emit — the contract the prefetch-ahead path in
+        ``train.py --schedule trajectory`` relies on."""
+        remaining = self._remaining_budget()
+        if remaining is None:
+            return None
+        probe = (self._probe_candidate()
+                 if self.observations and self.fit_rank() < 2 else None)
+        cm = self.fitted_cost_model()
+        process = (CostProcess(base=cm)
+                   if self.process is None
+                   else dataclasses.replace(self.process, base=cm))
+        try:
+            tp = plan_trajectory_fn(remaining, process, rounds=k,
+                                    t0=self.spent_s, **self._plan_kwargs())
+        except ValueError:
+            return None
+        if tp.rounds == 0:
+            return None
+        taus = tp.taus
+        if probe is not None:
+            # the probe replaces the chunk's LAST planned round — only if
+            # the swapped chunk still fits the remaining budget (the
+            # probe is chosen nearest in round time, but a tight budget
+            # end could not absorb an expensive rank-raiser).
+            comp = tp.steps[0].compressor
+            rc_probe = cm.round_cost(int(probe[0]), int(probe[1]), comp)
+            rc_last = tp.steps[-1].round_cost
+            fits = (
+                (remaining.wall_clock_s is None
+                 or tp.total_time_s - rc_last.time_s + rc_probe.time_s
+                 <= remaining.wall_clock_s)
+                and (remaining.wire_bits is None
+                     or tp.total_wire_bits - rc_last.wire_bits
+                     + rc_probe.wire_bits <= remaining.wire_bits)
+                and (remaining.energy_j is None
+                     or tp.total_energy_j - rc_last.energy_j
+                     + rc_probe.energy_j <= remaining.energy_j))
+            if fits:
+                taus[-1] = probe
+            else:
+                probe = None
+        return cm, tp, taus, probe
+
+    def predict_trajectory(self, k: int) -> Optional[np.ndarray]:
+        """PREDICT the next k-round [k, 2] schedule without committing it.
+
+        Pure read: no observation, no spend, no history event, no
+        ``current``/``cost_model``/``exhausted`` update — calling it any
+        number of times leaves the controller bit-identical. Called with
+        the same observation/spend state the next ``next_trajectory`` will
+        see (i.e. after the chunk's ``observe_chunk`` and before any new
+        spend), the returned rows equal what ``next_trajectory`` will
+        emit — which is what lets trajectory mode prefetch host batches
+        against the prediction and rebuild only on a genuine mismatch
+        (``HostPrefetcher.mark_stale``). Returns None when the controller
+        is exhausted or the remaining budget affords no round (prediction
+        never *sets* ``exhausted`` — the committing call does)."""
+        assert k >= 1
+        if self.exhausted or self.current is None:
+            return None
+        cand = self._trajectory_candidate(k)
+        return None if cand is None else cand[2]
+
     def next_trajectory(self, k: int,
                         round_idx: int = 0) -> Optional[np.ndarray]:
         """The next k rounds' [k, 2] (tau1, tau2) schedule — the
@@ -429,51 +500,13 @@ class AdaptiveController:
         assert k >= 1
         if self.exhausted or self.current is None:
             return None
-        remaining = self._remaining_budget()
-        if remaining is None:
+        cand = self._trajectory_candidate(k)
+        if cand is None:
             self.exhausted = True
             return None
-        probe = (self._probe_candidate()
-                 if self.observations and self.fit_rank() < 2 else None)
-        self.cost_model = self.fitted_cost_model()
-        process = (CostProcess(base=self.cost_model)
-                   if self.process is None
-                   else dataclasses.replace(self.process,
-                                            base=self.cost_model))
-        try:
-            tp = plan_trajectory_fn(remaining, process, rounds=k,
-                                    t0=self.spent_s, **self._plan_kwargs())
-        except ValueError:
-            self.exhausted = True
-            return None
-        if tp.rounds == 0:
-            self.exhausted = True
-            return None
+        cm, tp, taus, probe = cand
+        self.cost_model = cm
         self.current = tp.steps[0]
-        taus = tp.taus
-        if probe is not None:
-            # the probe replaces the chunk's LAST planned round — only if
-            # the swapped chunk still fits the remaining budget (the
-            # probe is chosen nearest in round time, but a tight budget
-            # end could not absorb an expensive rank-raiser).
-            comp = self.current.compressor
-            rc_probe = self.cost_model.round_cost(int(probe[0]),
-                                                  int(probe[1]), comp)
-            rc_last = tp.steps[-1].round_cost
-            fits = (
-                (remaining.wall_clock_s is None
-                 or tp.total_time_s - rc_last.time_s + rc_probe.time_s
-                 <= remaining.wall_clock_s)
-                and (remaining.wire_bits is None
-                     or tp.total_wire_bits - rc_last.wire_bits
-                     + rc_probe.wire_bits <= remaining.wire_bits)
-                and (remaining.energy_j is None
-                     or tp.total_energy_j - rc_last.energy_j
-                     + rc_probe.energy_j <= remaining.energy_j))
-            if fits:
-                taus[-1] = probe
-            else:
-                probe = None
         self._emit(round_idx, "trajectory",
                    schedule=[[int(a), int(b)] for a, b in taus],
                    probe=([int(probe[0]), int(probe[1])]

@@ -7,6 +7,12 @@ resource cost decomposes as
     bits   = tau2 * copies * model_bits * compression_ratio      (per node)
     energy = tau1 * e_compute_step + tau2 * e_gossip_step
 
+(under the pipelined executor, ``overlap="pipeline"``, the time term is
+``tau1 * t_compute_step + max(0, tau2 * t_gossip_step - overlap_window)``
+with the window equal to the local-phase time — gossip rides under the
+next round's compute and only the overhang is paid; bits and energy are
+unchanged)
+
 where ``copies`` — the model copies each node receives per gossip step —
 comes from ``mixing.gossip_copies_per_step(topology, engine)`` so the dense
 all-gather lowering (N-1 copies) and the sparse per-neighbor engine
@@ -202,6 +208,18 @@ class CostModel:
                 truth & the ppermute engine), "dense" all-gather lowering,
                 "auto" whichever the launcher would pick (see
                 ``mixing.gossip_copies_per_step``).
+    overlap:    executor overlap mode being priced. "none" is the paper's
+                additive round time; "pipeline" hides the wire under the
+                NEXT round's local steps (``RoundExecutor(overlap=
+                "pipeline")``), so the round time becomes
+
+                    tau1 * t_c + max(0, tau2 * t_g - overlap_window)
+
+                with overlap_window = tau1 * t_c — i.e. only the gossip
+                time that does not fit under compute is paid. Degenerates
+                EXACTLY to the additive model at "none" (window 0). Wire
+                bits and energy are unchanged: overlap hides time, it does
+                not remove traffic.
     """
 
     compute: ComputeModel
@@ -209,6 +227,18 @@ class CostModel:
     topology: Topology
     model_bits: float
     engine: str = "sparse"
+    overlap: str = "none"
+
+    def __post_init__(self):
+        if self.overlap not in ("none", "pipeline"):
+            raise ValueError(
+                f"overlap must be 'none' or 'pipeline', got {self.overlap!r}")
+
+    def overlap_window(self, tau1: int) -> float:
+        """Seconds of gossip hidden under the next round's local phase."""
+        if self.overlap == "pipeline":
+            return tau1 * self.compute.t_step
+        return 0.0
 
     def compression_ratio(self, compressor: Optional[Compressor]) -> float:
         """Wire-bits ratio vs fp32 for one model copy (1.0 uncompressed)."""
@@ -245,7 +275,7 @@ class CostModel:
         else:
             e_g = self.link.energy_transfer(
                 self.copies_per_step() * copy_bytes)
-        comm_time = tau2 * t_g
+        comm_time = max(0.0, tau2 * t_g - self.overlap_window(tau1))
         return RoundCost(
             time_s=tau1 * t_c + comm_time,
             wire_bits=tau2 * self.gossip_bits_per_step(compressor),
@@ -293,7 +323,10 @@ class CostModel:
             bits_step = (2.0 * len(set(act)) / n
                          * self.model_bits
                          * self.compression_ratio(compressor))
-        comm_time = tau2 * t_g
+        # the window only spans compute that actually runs: a fully masked
+        # round (t_c = 0) hides nothing.
+        window = (tau1 * t_c if self.overlap == "pipeline" else 0.0)
+        comm_time = max(0.0, tau2 * t_g - window)
         frac = n_active / max(self.topology.num_nodes, 1)
         return RoundCost(
             time_s=tau1 * t_c + comm_time,
@@ -444,7 +477,8 @@ class CostProcess:
 
 def unit_cost_model(topology: Topology, comm_compute_ratio: float, *,
                     engine: str = "sparse",
-                    rep_dim: int = 1024) -> CostModel:
+                    rep_dim: int = 1024,
+                    overlap: str = "none") -> CostModel:
     """The benchmarks' abstract cost unit: t_compute_step = 1, and one
     gossip step costs ``comm_compute_ratio`` — the "comm/comp" knob that
     ``bench_balance`` sweeps. ``rep_dim`` is the representative parameter
@@ -456,7 +490,8 @@ def unit_cost_model(topology: Topology, comm_compute_ratio: float, *,
     link = LinkModel(bytes_per_s=bytes_per_step / comm_compute_ratio)
     return CostModel(
         compute=ComputeModel(step_flops=1.0, flops_per_s=1.0),
-        link=link, topology=topology, model_bits=model_bits, engine=engine)
+        link=link, topology=topology, model_bits=model_bits, engine=engine,
+        overlap=overlap)
 
 
 def comm_compute_cost(

@@ -110,9 +110,18 @@ def evaluate_grid(
     ``availability``: sporadic-participation rates forwarded to
     ``bounds.predicted_loss_decrement`` — degraded mixing, node-rate-scaled
     descent, and the tau2 = 0 drift credit that ranks outage rounds.
+
+    An overlap-aware cost model (``cost_model.overlap == "pipeline"``)
+    prices candidates on BOTH sides of the trade: the round cost uses the
+    max-form round time (gossip hidden under compute), and the bound is
+    charged the one-round-stale mixing penalty
+    (``bounds.stale_mixing_zeta`` at staleness 1) — so the grid search
+    weighs hidden wire time against slower mixing instead of getting the
+    speedup for free.
     """
     topo = cost_model.topology
     model_dim = max(int(round(cost_model.model_bits / 32.0)), 1)
+    staleness = 1.0 if cost_model.overlap == "pipeline" else 0.0
     out: List[Plan] = []
     for comp in compressors:
         for (t1, t2) in grid:
@@ -124,7 +133,8 @@ def evaluate_grid(
             ev = predicted_loss_decrement(
                 t1, t2, topo, sigma, T=T, f_gap=f_gap, L=L, eta=eta,
                 compressor=comp, gamma=gamma,
-                model_dim=model_dim, availability=availability)
+                model_dim=model_dim, availability=availability,
+                staleness=staleness)
             out.append(Plan(tau1=t1, tau2=t2, compressor=comp, eta=ev.eta,
                             rounds=r, total_iters=T,
                             predicted_bound=ev.bound, round_cost=rc,

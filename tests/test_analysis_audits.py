@@ -302,7 +302,8 @@ def test_production_audits_pass_via_cli(tmp_path):
     assert {r["name"] for r in results} == {
         "donation", "recompile", "collective-matching",
         "telemetry-neutrality", "participation-recompile",
-        "participation-collectives"}
+        "participation-collectives", "overlap-recompile",
+        "overlap-collectives"}
     assert all(r["ok"] for r in results), results
     donation = next(r for r in results if r["name"] == "donation")
     # the whole DFLState carry: params, opt_state, rng, round_idx.
