@@ -42,7 +42,11 @@ double-buffered superstep keeps one fingerprint across trajectories —
 the in-flight carry must not bake a tau into the trace) and
 **overlap-collectives** (the pipelined executable, drain included,
 still ships exactly ``Topology.shifts()`` — overlap moves the exchange
-one round later, never onto different wires). The individual
+one round later, never onto different wires); plus one batched-engine
+variant: **cohort-recompile** (lowering the ``[K, 2+2C+E]`` cohort rows
+at the identity cohort and at two distinct ``CohortSampler`` draws
+shares one fingerprint — sampled cohort ids are schedule data, so a
+mega-scale run never recompiles across draws). The individual
 ``audit_*`` functions are pure text analysis, testable on synthetic
 HLO and deliberately-broken fixtures.
 """
@@ -63,6 +67,7 @@ __all__ = [
     "audit_collective_matching",
     "audit_telemetry_neutrality",
     "build_audit_executor",
+    "build_cohort_audit_executor",
     "run_production_audits",
 ]
 
@@ -300,6 +305,41 @@ def build_audit_executor(num_nodes: int = 8, *, tau1_max: int = 3,
     return ex, state, batches, topo
 
 
+def build_cohort_audit_executor(population: int = 32, cohort: int = 8, *,
+                                tau1_max: int = 3, tau2_max: int = 2,
+                                rounds: int = 2, dim: int = 33):
+    """A small but REAL batched-engine superstep: ring(C) cohort topology
+    over a ``population``-node virtual state stack, dynamic taus, cohort
+    ids as schedule data — the executable class ``launch.train
+    --virtual-nodes`` dispatches. Single-device (the whole point of the
+    batched engine). Returns ``(executor, state, batches, topology)``."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import DFLConfig, init_state
+    from repro.core.executor import RoundExecutor, stack_round_batches
+    from repro.core.topology import ring
+    from repro.optim import sgd
+
+    topo = ring(cohort)
+    cfg = DFLConfig(tau1=tau1_max, tau2=tau2_max, topology=topo)
+    opt = sgd(0.1)
+
+    def loss_fn(p, b, k=None):
+        return jnp.mean((p["w"][None] - b) ** 2)
+
+    ex = RoundExecutor(cfg, loss_fn, opt, engine="batched",
+                       population=population, dynamic=True, donate=True)
+    state = init_state({"w": jnp.zeros((dim,))}, population, opt,
+                       jax.random.key(0))
+    key = jax.random.key(1)
+    per_round = [jax.random.normal(jax.random.fold_in(key, r),
+                                   (tau1_max, cohort, 4, dim))
+                 for r in range(rounds)]
+    batches = stack_round_batches(per_round, tau1_max)
+    return ex, state, batches, topo
+
+
 def run_production_audits(num_nodes: int = 8) -> List[AuditResult]:
     """Build the production sparse superstep (plus its participation and
     pipelined-overlap variants) and run the full audit suite."""
@@ -361,6 +401,30 @@ def run_production_audits(num_nodes: int = 8) -> List[AuditResult]:
     low_oa = ex_o.lower_superstep(state_o, batches_o, taus_a)
     low_ob = ex_o.lower_superstep(state_o, batches_o, taus_b)
 
+    # Cohort sampling: on the batched engine the [K, 2+2C+E] rows carry
+    # the sampled cohort IDS as schedule data — lowering the identity
+    # cohort and two distinct CohortSampler draws must share one
+    # fingerprint (a baked id constant would recompile on every draw,
+    # destroying the mega-scale zero-recompile property).
+    from repro.faults import CohortSampler
+
+    ex_c, state_c, batches_c, topo_c = build_cohort_audit_executor()
+    pop = ex_c.population
+    sampler_a = CohortSampler(population=pop, cohort=topo_c.num_nodes,
+                              seed=3)
+    sampler_b = CohortSampler(population=pop, cohort=topo_c.num_nodes,
+                              seed=11)
+    identity = np.array([[1, 1], [2, 1]], np.int32)
+    low_ca = ex_c.lower_superstep(
+        state_c, batches_c, ex_c._check_trajectory(identity, 2))
+    low_cb = ex_c.lower_superstep(
+        state_c, batches_c,
+        sampler_a.cohort_trajectory(identity, num_edges=topo_c.num_edges))
+    low_cc = ex_c.lower_superstep(
+        state_c, batches_c,
+        sampler_b.cohort_trajectory(identity, round0=5,
+                                    num_edges=topo_c.num_edges))
+
     return [
         audit_donation(compiled_text, leaf_names),
         audit_recompile([low_a.as_text(), low_b.as_text()],
@@ -378,4 +442,9 @@ def run_production_audits(num_nodes: int = 8) -> List[AuditResult]:
                         name="overlap-recompile"),
         audit_collective_matching(low_oa.compile().as_text(), topo,
                                   name="overlap-collectives"),
+        audit_recompile(
+            [low_ca.as_text(), low_cb.as_text(), low_cc.as_text()],
+            labels=["identity-cohort", "sampler(seed=3)@r0",
+                    "sampler(seed=11)@r5"],
+            name="cohort-recompile"),
     ]

@@ -46,6 +46,7 @@ from repro.core.executor import (
     stack_round_batches,
 )
 from repro.core.substrate import (
+    BatchedSubstrate,
     DenseSubstrate,
     NodeSubstrate,
     ShardedSubstrate,
@@ -64,6 +65,6 @@ __all__ = [
     "sparse_engine_eligible",
     "RoundExecutor", "HostPrefetcher", "MetricsBuffer",
     "stack_round_batches",
-    "NodeSubstrate", "DenseSubstrate", "ShardedSubstrate",
+    "NodeSubstrate", "DenseSubstrate", "BatchedSubstrate", "ShardedSubstrate",
     "mixing", "metrics", "substrate",
 ]

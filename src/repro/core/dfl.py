@@ -46,8 +46,8 @@ import jax.numpy as jnp
 
 from repro.core import mixing as mixing_lib
 from repro.core.compression import Compressor
-from repro.core.substrate import (DenseSubstrate, NodeSubstrate,
-                                  mesh_axis_size)
+from repro.core.substrate import (BatchedSubstrate, DenseSubstrate,
+                                  NodeSubstrate, mesh_axis_size)
 from repro.core.topology import Topology
 
 PyTree = Any
@@ -455,7 +455,7 @@ def make_round_fn(
     cfg: DFLConfig, loss_fn: LossFn, opt, constrain=None, *,
     engine: str = "dense", mesh=None, node_axes: Sequence[str] = ("data",),
     use_kernels: bool = False, dynamic_taus: bool = False,
-    participation: bool = False,
+    participation: bool = False, population: Optional[int] = None,
 ) -> Callable[..., Tuple[DFLState, dict]]:
     """Build the jittable one-round function for either engine.
 
@@ -473,7 +473,9 @@ def make_round_fn(
 
     engine: "dense" (default; any topology), "sparse" (shard_map +
     ppermute; needs ``mesh`` whose ``node_axes`` enumerate all N nodes and
-    a shift-structured topology), or "auto" (sparse when eligible).
+    a shift-structured topology), "batched" (node-batched virtual
+    population — see below), or "auto" (batched when a ``population`` is
+    given, else sparse when eligible, else dense).
     ``use_kernels`` routes the sparse hot path through the Pallas kernels.
 
     ``dynamic_taus``: the returned function is
@@ -489,12 +491,25 @@ def make_round_fn(
     sporadic round semantic of ``round_body(..., masks=...)``. Requires
     ``dynamic_taus`` (masks ride the same schedule-as-data path) and plain
     per-step mixing (no dense_power / topology_schedule).
+
+    ``population``: the node-batched mega-scale path (engine="batched").
+    State leaves are stacked ``[population, ...]`` while ``cfg.topology``
+    is the C-node COHORT graph; the returned function is
+    round_fn(state, batches, tau1, tau2, cohort_ids, node_mask, edge_mask)
+    with a traced ``[C]`` int32 vector of global virtual-node ids plus the
+    usual participation masks over the cohort topology. Each round gathers
+    the cohort rows, runs the UNCHANGED shared ``round_body`` (per-node
+    keys fold the global ids — ``BatchedSubstrate.node_keys``), and
+    scatters back; non-cohort nodes are bitwise frozen. At full population
+    with identity ids the round is bitwise the dense engine's
+    (tests/test_batched_parity.py). Implies the ``participation``
+    constraints (dynamic taus, per-step mixing, no topology schedule).
     """
     if dynamic_taus and cfg.mixing_impl == "dense_power":
         raise ValueError(
             "dynamic taus need iterated mixing: dense_power bakes C^tau2 in "
             "at trace time (use mixing_impl='dense')")
-    if participation:
+    if participation or population is not None:
         if not dynamic_taus:
             raise ValueError(
                 "participation masks ride the dynamic schedule-as-data "
@@ -504,8 +519,51 @@ def make_round_fn(
                 "participation masks index cfg.topology.edges(); a "
                 "round-varying topology schedule has no stable edge list")
     if engine == "auto":
-        engine = "sparse" if sparse_engine_eligible(
-            cfg, mesh, node_axes) else "dense"
+        if population is not None:
+            # the population exceeds what any mesh enumerates: nodes must
+            # be data, not hardware (docs/ARCHITECTURE.md engine rules).
+            engine = "batched"
+        else:
+            engine = "sparse" if sparse_engine_eligible(
+                cfg, mesh, node_axes) else "dense"
+    if engine == "batched":
+        if population is None:
+            raise ValueError(
+                "engine='batched' needs population=V (the virtual node "
+                "count the state leaves are stacked over)")
+        # build-time validation (population >= cohort size) happens here,
+        # not inside the trace.
+        BatchedSubstrate(cfg.topology, population)
+
+        def batched_round_fn(state: DFLState, batches: PyTree, tau1, tau2,
+                             cohort_ids, node_mask, edge_mask):
+            sub = BatchedSubstrate(cfg.topology, population,
+                                   jnp.asarray(cohort_ids, jnp.int32))
+            params = sub.gather_cohort(state.params)
+            opt_state = sub.gather_cohort(state.opt_state)
+            hat = (sub.gather_cohort(state.hat_params)
+                   if state.hat_params is not None else None)
+            params, opt_state, hat, metrics = round_body(
+                cfg, loss_fn, opt, sub, params, opt_state, hat,
+                state.rng, state.round_idx, batches, constrain,
+                taus=(jnp.asarray(tau1, jnp.int32),
+                      jnp.asarray(tau2, jnp.int32)),
+                masks=(jnp.asarray(node_mask, jnp.int32),
+                       jnp.asarray(edge_mask, jnp.int32)))
+            state = state._replace(
+                params=sub.scatter_cohort(state.params, params),
+                opt_state=sub.scatter_cohort(state.opt_state, opt_state),
+                hat_params=(sub.scatter_cohort(state.hat_params, hat)
+                            if hat is not None else None),
+                round_idx=state.round_idx + 1)
+            return state, metrics
+
+        return batched_round_fn
+    if population is not None:
+        raise ValueError(
+            f"population= is a batched-engine parameter (got engine="
+            f"{engine!r}); the {engine} engine's node count IS the "
+            "topology's")
     if engine == "sparse":
         from repro.core.sharded import make_sharded_round_fn
 
@@ -667,6 +725,12 @@ def make_pipeline_fns(
         raise ValueError(
             "overlap='pipeline' is dynamic-only: dense_power bakes C^tau2 "
             "in at trace time (use mixing_impl='dense')")
+    if engine == "batched":
+        raise ValueError(
+            "overlap='pipeline' is not supported on the batched engine: "
+            "consecutive rounds gossip over DIFFERENT sampled cohorts, so "
+            "the in-flight exchange has no stable buffer to double-buffer "
+            "(use overlap='none')")
     if participation and cfg.topology_schedule:
         raise ValueError(
             "participation masks index cfg.topology.edges(); a "

@@ -222,13 +222,34 @@ class RoundExecutor:
         donate: bool = True,
         telemetry=None,
         overlap: str = "none",
+        population: Optional[int] = None,
     ):
         self.cfg = cfg
         self.dynamic = dynamic
         self.donate = donate
-        self.participation = participation
         self.num_nodes = cfg.topology.num_nodes
         self.num_edges = cfg.topology.num_edges
+        if engine == "auto" and population is not None:
+            engine = "batched"
+        self.batched = engine == "batched"
+        if self.batched:
+            if population is None:
+                raise ValueError(
+                    "engine='batched' needs population=V (virtual node "
+                    "count the state leaves are stacked over)")
+            if not dynamic:
+                raise ValueError(
+                    "cohort ids are schedule data on the dynamic path; "
+                    "the static fallback keys compiles on (tau1, tau2) "
+                    "and cannot express per-round cohorts")
+            # cohort rows subsume the participation layout (ids + masks).
+            participation = True
+        elif population is not None:
+            raise ValueError(
+                f"population= is a batched-engine parameter (got engine="
+                f"{engine!r})")
+        self.population = population
+        self.participation = participation
         if overlap not in ("none", "pipeline"):
             raise ValueError(
                 f"unknown overlap mode {overlap!r} (use 'none'|'pipeline')")
@@ -237,6 +258,11 @@ class RoundExecutor:
                 "overlap='pipeline' rides the dynamic superstep scan; the "
                 "static fallback has no carry to double-buffer "
                 "(pass dynamic=True)")
+        if overlap == "pipeline" and self.batched:
+            raise ValueError(
+                "overlap='pipeline' is not supported on the batched "
+                "engine: consecutive rounds gossip over DIFFERENT sampled "
+                "cohorts (use overlap='none')")
         self.overlap = overlap
         if participation and not dynamic:
             raise ValueError(
@@ -276,9 +302,12 @@ class RoundExecutor:
                 superstep, donate_argnums=(0,) if donate else ())
         elif dynamic:
             round_fn = make_round_fn(cfg, loss_fn, opt, dynamic_taus=True,
-                                     participation=participation,
+                                     participation=(participation
+                                                    and not self.batched),
+                                     population=population,
                                      **self._make_kw)
             n, e = self.num_nodes, self.num_edges
+            batched = self.batched
 
             def superstep(state: DFLState, batches: PyTree, taus):
                 self._trace_count += 1  # fires per trace == per compile
@@ -286,7 +315,22 @@ class RoundExecutor:
 
                 def body(st, xs):
                     b, tau = xs
-                    if participation:
+                    if batched:
+                        # cohort row layout: (tau1, tau2, ids [C],
+                        # node mask [C], edge mask [E]) — ids and masks
+                        # are schedule DATA, so every cohort draw rides
+                        # the one compiled superstep (cohort-recompile
+                        # audit).
+                        nm = tau[2 + n:2 + 2 * n]
+                        st, metrics = round_fn(
+                            st, b, tau[0], tau[1], tau[2:2 + n],
+                            nm, tau[2 + 2 * n:])
+                        metrics = dict(
+                            metrics,
+                            active_nodes=jnp.sum(nm),
+                            masked_edges=(jnp.int32(e)
+                                          - jnp.sum(tau[2 + 2 * n:])))
+                    elif participation:
                         st, metrics = round_fn(
                             st, b, tau[0], tau[1],
                             tau[2:2 + n], tau[2 + n:])
@@ -380,14 +424,48 @@ class RoundExecutor:
 
     @property
     def row_width(self) -> int:
-        """Trajectory row width: 2, or 2 + N + E with participation."""
+        """Trajectory row width: 2; 2 + N + E with participation; or
+        2 + 2C + E on the batched engine (tau1, tau2, cohort ids [C],
+        node mask [C], edge mask [E])."""
+        if self.batched:
+            return 2 + 2 * self.num_nodes + self.num_edges
         if self.participation:
             return 2 + self.num_nodes + self.num_edges
         return 2
 
     def _check_trajectory(self, taus, k: int) -> np.ndarray:
         arr = np.asarray(taus, dtype=np.int32)
-        if self.participation:
+        if self.batched:
+            c = self.num_nodes
+            if arr.ndim != 2 or arr.shape[1] not in (2, self.row_width):
+                raise ValueError(
+                    f"cohort trajectory must be [K, 2] (identity cohort, "
+                    f"all-active) or [K, {self.row_width}] (tau1, tau2, "
+                    f"cohort ids [{c}], node mask [{c}], edge mask "
+                    f"[{self.num_edges}]) rows, got shape {arr.shape}")
+            if arr.shape[1] == 2:  # plain schedule: identity cohort
+                kk = arr.shape[0]
+                arr = np.concatenate(
+                    [arr,
+                     np.broadcast_to(np.arange(c, dtype=np.int32), (kk, c)),
+                     np.ones((kk, self.row_width - 2 - c), np.int32)],
+                    axis=1)
+            ids = arr[:, 2:2 + c]
+            if ids.size:
+                if ids.min() < 0 or ids.max() >= self.population:
+                    raise ValueError(
+                        f"cohort ids must lie in [0, {self.population}) "
+                        f"(got range [{ids.min()}, {ids.max()}])")
+                if any(len(np.unique(row)) != c for row in ids):
+                    raise ValueError(
+                        "cohort ids must be unique within each row "
+                        "(a node cannot occupy two cohort slots)")
+            masks = arr[:, 2 + c:]
+            if masks.size and not np.isin(masks, (0, 1)).all():
+                raise ValueError(
+                    "participation masks must be 0/1 "
+                    f"(got values {sorted(set(masks.ravel().tolist()))})")
+        elif self.participation:
             if arr.ndim != 2 or arr.shape[1] not in (2, self.row_width):
                 raise ValueError(
                     f"participation trajectory must be [K, 2] (all-active) "

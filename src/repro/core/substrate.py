@@ -49,6 +49,7 @@ __all__ = [
     "supports_partial_auto",
     "NodeSubstrate",
     "DenseSubstrate",
+    "BatchedSubstrate",
     "ShardedSubstrate",
 ]
 
@@ -290,6 +291,77 @@ class DenseSubstrate(NodeSubstrate):
             return jnp.where(m, nw, od)
 
         return jax.tree_util.tree_map(sel, new, old)
+
+
+class BatchedSubstrate(DenseSubstrate):
+    """Dense substrate over a SAMPLED cohort drawn from a virtual
+    population (the node-batched mega-scale engine).
+
+    The population is DATA, not hardware: training state stays stacked
+    ``[population, ...]`` on the host device, and each round gathers the
+    ``cohort_ids`` rows (a traced ``[C]`` int32 vector of GLOBAL node
+    ids), runs the ordinary dense round over the C-node cohort
+    ``topology``, and scatters the results back — non-cohort nodes are
+    bitwise frozen. Per-round compute, gossip, and host data are all
+    C-sized, so one machine simulates 10k-1M lightweight virtual nodes
+    (the DFedAvg client-sampling regime, arXiv:2104.11375).
+
+    Every node op is inherited from ``DenseSubstrate`` EXCEPT
+    ``node_keys``, which folds the GLOBAL virtual-node id of each cohort
+    slot instead of the slot index: a virtual node's per-step RNG stream
+    is a function of its population identity, not of where a draw seated
+    it. Two consequences, both load-bearing for the parity harness
+    (tests/test_batched_parity.py):
+
+      * at full population (``cohort_ids == arange(C)``, C == population)
+        the gathers/scatters are identities and the folded ids equal the
+        dense engine's slot indices, so a batched round is BITWISE the
+        dense round — plain and CHOCO, masked and unmasked;
+      * under a real C-of-V draw, a node's local-gradient/compressor
+        noise is reproducible across different cohorts containing it.
+
+    ``cohort_ids`` may be traced (the executor scans them as schedule
+    xs — one executable across cohort draws, audited by
+    ``cohort-recompile``) or ``None`` for the identity cohort.
+    """
+
+    def __init__(self, topology, population: int, cohort_ids=None):
+        super().__init__(topology)
+        population = int(population)
+        if population < topology.num_nodes:
+            raise ValueError(
+                f"population {population} smaller than the cohort "
+                f"topology's {topology.num_nodes} nodes")
+        self.population = population
+        self.cohort_ids = cohort_ids
+
+    def _ids(self):
+        if self.cohort_ids is None:
+            return jnp.arange(self.num_nodes, dtype=jnp.int32)
+        return jnp.asarray(self.cohort_ids, jnp.int32)
+
+    def node_keys(self, key):
+        return jax.vmap(lambda i: jax.random.fold_in(key, i))(self._ids())
+
+    # -- population <-> cohort movement ------------------------------------
+
+    def gather_cohort(self, tree: PyTree) -> PyTree:
+        """Cohort rows of a ``[population, ...]``-stacked tree (identity
+        when ``cohort_ids`` is None and C == population)."""
+        if self.cohort_ids is None and self.num_nodes == self.population:
+            return tree
+        ids = self._ids()
+        return jax.tree_util.tree_map(
+            lambda x: jnp.take(x, ids, axis=0), tree)
+
+    def scatter_cohort(self, full: PyTree, cohort: PyTree) -> PyTree:
+        """Write cohort rows back into the population-stacked tree;
+        non-cohort rows are untouched (bitwise)."""
+        if self.cohort_ids is None and self.num_nodes == self.population:
+            return cohort
+        ids = self._ids()
+        return jax.tree_util.tree_map(
+            lambda f, c: f.at[ids].set(c), full, cohort)
 
 
 class ShardedSubstrate(NodeSubstrate):

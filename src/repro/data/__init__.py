@@ -1,10 +1,10 @@
 """Data pipeline: synthetic corpora + federated non-IID partitioning."""
-from repro.data.lm import SyntheticLM, lm_batches_for_dfl
+from repro.data.lm import SyntheticLM, lm_batches_for_cohort, lm_batches_for_dfl
 from repro.data.federated import dirichlet_partition, label_shard_partition
 from repro.data.images import SyntheticImages, image_batches_for_dfl
 
 __all__ = [
-    "SyntheticLM", "lm_batches_for_dfl",
+    "SyntheticLM", "lm_batches_for_cohort", "lm_batches_for_dfl",
     "dirichlet_partition", "label_shard_partition",
     "SyntheticImages", "image_batches_for_dfl",
 ]

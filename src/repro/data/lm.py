@@ -30,19 +30,47 @@ class SyntheticLM:
     noniid_alpha: float = 0.5
     branching: int = 16
     seed: int = 0
+    # lazy=True is the mega-scale mode (--virtual-nodes): per-node chains
+    # are built on first use from np.random.SeedSequence([seed, node]) —
+    # a pure function of (seed, node), so shard content is independent of
+    # CONSTRUCTION and ACCESS order (a 1M-node corpus costs O(cohort)
+    # memory, and prefetcher threading cannot reorder shards). The eager
+    # default draws every chain sequentially from one seed stream and is
+    # kept bit-identical for existing runs; the two modes intentionally
+    # produce different shards.
+    lazy: bool = False
 
     def __post_init__(self):
-        rng = np.random.default_rng(self.seed)
         v, k = self.vocab_size, min(self.branching, self.vocab_size)
+
         # shared backbone chain + per-node perturbation chains.
-        def chain():
+        def chain(rng):
             nxt = rng.integers(0, v, size=(v, k))
             logits = rng.normal(size=(v, k)).astype(np.float32)
             probs = np.exp(logits) / np.exp(logits).sum(-1, keepdims=True)
             return nxt, np.cumsum(probs, axis=-1)
 
-        self._shared = chain()
-        self._per_node = [chain() for _ in range(self.num_nodes)]
+        self._chain = chain
+        if self.lazy:
+            self._shared = chain(np.random.default_rng(
+                np.random.SeedSequence([self.seed, self.num_nodes])))
+            self._per_node_cache: Dict[int, Tuple[np.ndarray,
+                                                  np.ndarray]] = {}
+        else:
+            rng = np.random.default_rng(self.seed)
+            self._shared = chain(rng)
+            self._per_node = [chain(rng) for _ in range(self.num_nodes)]
+
+    def _node_chain(self, node: int) -> Tuple[np.ndarray, np.ndarray]:
+        node = node % self.num_nodes
+        if not self.lazy:
+            return self._per_node[node]
+        hit = self._per_node_cache.get(node)
+        if hit is None:
+            hit = self._chain(np.random.default_rng(
+                np.random.SeedSequence([self.seed, node])))
+            self._per_node_cache[node] = hit
+        return hit
 
     def _sample_stream(self, rng: np.random.Generator, node: int,
                        length: int) -> np.ndarray:
@@ -50,7 +78,7 @@ class SyntheticLM:
         out = np.empty(length, np.int64)
         cur = int(rng.integers(0, v))
         s_nxt, s_cum = self._shared
-        n_nxt, n_cum = self._per_node[node % self.num_nodes]
+        n_nxt, n_cum = self._node_chain(node)
         use_node = rng.random(length) < self.noniid_alpha
         u = rng.random(length)
         for i in range(length):
@@ -87,4 +115,35 @@ def lm_batches_for_dfl(
                              step=round_idx * tau1 + t)
             toks[t, n] = b["tokens"]
             labs[t, n] = b["labels"]
+    return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)}
+
+
+def lm_batches_for_cohort(
+    corpus: SyntheticLM,
+    tau1: int,
+    cohort_ids: np.ndarray,
+    batch_per_node: int,
+    seq_len: int,
+    round_idx: int,
+) -> Dict[str, jnp.ndarray]:
+    """Batches shaped [tau1, C, B, S] for one batched-engine round.
+
+    Cohort slot j streams the shard of GLOBAL virtual node
+    ``cohort_ids[j]`` — the same ``corpus.batch(node, ..., step)`` pure
+    function ``lm_batches_for_dfl`` uses, so the slot's data depends only
+    on (seed, global node id, step), never on which cohort it was drawn
+    into (the shard-order pinning property: tests/test_determinism.py).
+    """
+    ids = np.asarray(cohort_ids, dtype=np.int64)
+    if ids.ndim != 1:
+        raise ValueError(f"cohort_ids must be 1-D, got shape {ids.shape}")
+    c = ids.shape[0]
+    toks = np.empty((tau1, c, batch_per_node, seq_len), np.int32)
+    labs = np.empty_like(toks)
+    for t in range(tau1):
+        for j, n in enumerate(ids):
+            b = corpus.batch(int(n), batch_per_node, seq_len,
+                             step=round_idx * tau1 + t)
+            toks[t, j] = b["tokens"]
+            labs[t, j] = b["labels"]
     return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)}

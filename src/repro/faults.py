@@ -56,6 +56,7 @@ __all__ = [
     "LinkFlap",
     "SporadicParticipation",
     "FaultPlan",
+    "CohortSampler",
     "load_fault_spec",
 ]
 
@@ -392,6 +393,97 @@ class FaultPlan:
                 fd["edge"] = tuple(fd["edge"])
             faults.append(_KINDS[kind](**fd))
         return cls(topology=topology, faults=tuple(faults),
+                   seed=int(spec.get("seed", 0)))
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortSampler:
+    """Uniform-without-replacement cohort sampling over a virtual
+    population (the DFedAvg client-sampling regime, arXiv:2104.11375).
+
+    Each round draws ``cohort`` distinct node ids from ``[0, population)``
+    via ``np.random.SeedSequence([seed, round_idx])`` — the SAME per-round
+    seed-stream discipline as ``SporadicParticipation``, so round r's
+    cohort never depends on which rounds were evaluated before it
+    (resume-safe: a checkpoint restart at round r redraws r's cohort
+    bit-identically from (seed, r), with no sampler state to persist
+    beyond ``DFLState.round_idx``).
+
+    Draws are SORTED so that at full participation (``cohort ==
+    population``) the draw is exactly ``arange(population)`` — the
+    batched engine's identity cohort, which makes the sampled trajectory
+    row degenerate bitwise to the legacy participation row
+    (tests/test_cohort_sampling.py).
+
+    ``cohort_trajectory`` composes with ``FaultPlan.mask_trajectory``:
+    feed it the chaos plan's ``[K, 2 + C + E]`` rows and it splices the
+    cohort ids in front of the masks, yielding the ``[K, 2 + 2C + E]``
+    rows ``RoundExecutor(engine="batched")`` scans. Mask semantics are
+    then *within-cohort*: ``node_mask[j]`` gates cohort slot j (i.e.
+    virtual node ``ids[j]``), so a chaos plan built over the C-node
+    cohort topology applies to whichever nodes were drawn this round.
+    """
+
+    population: int
+    cohort: int
+    seed: int = 0
+
+    def __post_init__(self):
+        if not (1 <= self.cohort <= self.population):
+            raise ValueError(
+                f"need 1 <= cohort <= population, got cohort={self.cohort} "
+                f"population={self.population}")
+
+    @property
+    def rate(self) -> float:
+        """Sampling rate C/V — the participation rate the planner prices
+        via ``planner.bounds.sampling_availability``."""
+        return self.cohort / self.population
+
+    def draw(self, round_idx: int) -> np.ndarray:
+        """Sorted int32 cohort ids for absolute round ``round_idx``."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, round_idx]))
+        ids = rng.choice(self.population, size=self.cohort, replace=False)
+        return np.sort(ids).astype(np.int32)
+
+    def cohort_trajectory(self, taus: np.ndarray, round0: int = 0,
+                          num_edges: int = 0) -> np.ndarray:
+        """Widen a trajectory with per-round cohort ids.
+
+        Accepts ``[K, 2]`` rows (tau1, tau2) — padded with all-ones
+        masks — or ``[K, 2 + C + E]`` participation rows (e.g. from
+        ``FaultPlan.mask_trajectory`` over the cohort topology), and
+        returns the ``[K, 2 + 2C + E]`` cohort rows of the batched
+        engine (row k carries the draw of absolute round ``round0 + k``).
+        ``num_edges`` (E) is required to disambiguate the input layout.
+        """
+        taus = np.asarray(taus, dtype=np.int32)
+        c, e = self.cohort, int(num_edges)
+        if taus.ndim != 2 or taus.shape[1] not in (2, 2 + c + e):
+            raise ValueError(
+                f"expected [K, 2] or [K, {2 + c + e}] rows "
+                f"(tau1, tau2, node mask [{c}], edge mask [{e}]), "
+                f"got shape {taus.shape}")
+        if taus.shape[1] == 2:
+            taus = np.concatenate(
+                [taus, np.ones((taus.shape[0], c + e), np.int32)], axis=1)
+        rows = [np.concatenate([taus[k, :2], self.draw(round0 + k),
+                                taus[k, 2:]])
+                for k in range(taus.shape[0])]
+        return (np.stack(rows).astype(np.int32) if rows
+                else np.zeros((0, 2 + 2 * c + e), dtype=np.int32))
+
+    # -- (de)serialization ---------------------------------------------------
+
+    def to_spec(self) -> Dict[str, Any]:
+        return {"population": self.population, "cohort": self.cohort,
+                "seed": self.seed}
+
+    @classmethod
+    def from_spec(cls, spec: Dict[str, Any]) -> "CohortSampler":
+        return cls(population=int(spec["population"]),
+                   cohort=int(spec["cohort"]),
                    seed=int(spec.get("seed", 0)))
 
 

@@ -13,6 +13,16 @@ engine; "sparse" forces it (errors if ineligible); "dense" forces the
 reference path. --use-kernels routes the sparse hot path through the
 Pallas kernels (interpret mode off-TPU).
 
+Mega-scale (--virtual-nodes V [--cohort C]): the node-batched engine
+stacks model state over V virtual nodes on one host and activates a
+uniformly-sampled C-node cohort per round (C defaults to --nodes; the
+gossip topology is built over the cohort). Cohort ids are schedule data
+on the ``[K, 2+2C+E]`` trajectory rows, so every draw rides ONE compiled
+executable (the ``cohort-recompile`` audit), data shards stream lazily by
+global node id, and --faults compose (masks apply within the cohort).
+Needs --dispatch fused; see benchmarks/bench_megascale.py for the
+rounds/s / host-memory envelope up to 1M nodes.
+
 Dispatch (--dispatch, --superstep): the hot loop runs on
 ``repro.core.executor.RoundExecutor``. "fused" (default) compiles ONE
 dynamic-(tau1, tau2) round executable and dispatches --superstep rounds per
@@ -77,8 +87,9 @@ from repro.core import (DFLConfig, HostPrefetcher, MetricsBuffer,
                         stack_round_batches, fully_connected,
                         paper_quasi_ring)
 from repro.core.compression import Identity, tree_wire_bits
-from repro.data.lm import SyntheticLM, lm_batches_for_dfl
-from repro.faults import FaultPlan, load_fault_spec
+from repro.data.lm import (SyntheticLM, lm_batches_for_cohort,
+                           lm_batches_for_dfl)
+from repro.faults import CohortSampler, FaultPlan, load_fault_spec
 from repro.kernels.ops import op_stats_delta
 from repro.launch.steps import kernelize_compressor
 from repro.models import train_loss, init_params
@@ -161,6 +172,20 @@ def main(argv=None) -> None:
                          "trajectories dispatched inside each superstep "
                          "(needs --plan-budget and --dispatch fused); "
                          "auto = adaptive iff --plan-budget is set")
+    ap.add_argument("--virtual-nodes", type=int, default=0,
+                    help="mega-scale mode: simulate this many virtual "
+                         "nodes on one host via the node-batched engine — "
+                         "model state is stacked [V, ...] and each round "
+                         "activates a sampled --cohort over the --nodes "
+                         "topology, with cohort ids as schedule data "
+                         "(zero recompiles across draws; needs "
+                         "--dispatch fused)")
+    ap.add_argument("--cohort", type=int, default=0,
+                    help="nodes sampled per round under --virtual-nodes "
+                         "(default: --nodes, the cohort topology size)")
+    ap.add_argument("--cohort-seed", type=int, default=0,
+                    help="seed of the per-round cohort draw stream "
+                         "(SeedSequence([seed, round]) — resume-safe)")
     ap.add_argument("--faults", default="",
                     help="deterministic fault injection: a JSON fault spec "
                          "(or @file.json) — see repro.faults. Rounds run "
@@ -189,6 +214,32 @@ def main(argv=None) -> None:
     arch = get_arch(args.arch)
     cfg = arch.reduced
     n = args.nodes
+    population = args.virtual_nodes
+    sampler = None
+    if args.cohort and not population:
+        raise SystemExit("--cohort samples a virtual population; set "
+                         "--virtual-nodes V")
+    if population:
+        if args.dispatch != "fused":
+            raise SystemExit("--virtual-nodes runs cohort ids as schedule "
+                             "data through the dynamic executor; the "
+                             "static keyed cache can't (use --dispatch "
+                             "fused)")
+        if args.engine != "auto":
+            raise SystemExit("--virtual-nodes selects the node-batched "
+                             "engine; leave --engine auto")
+        if args.overlap == "pipeline":
+            raise SystemExit("--overlap pipeline double-buffers a fixed "
+                             "node set; sampled cohorts change every round "
+                             "(use --overlap none)")
+        # the gossip topology is built over the COHORT (n becomes the
+        # per-round active set size); the population only sizes the
+        # stacked state and the shard id space.
+        n = args.cohort or args.nodes
+        sampler = CohortSampler(population=population, cohort=n,
+                                seed=args.cohort_seed)
+        print(f"mega-scale: population={population} cohort={n} "
+              f"(sampling rate {sampler.rate:.4f})")
     comp = kernelize_compressor(
         make_compressor(args.compression) if args.compression else None,
         args.use_kernels)
@@ -208,14 +259,17 @@ def main(argv=None) -> None:
         print(f"fault plan: {len(fault_plan.faults)} fault(s), "
               f"seed={fault_plan.seed}")
 
-    corpus = SyntheticLM(vocab_size=cfg.vocab_size, num_nodes=n,
-                         noniid_alpha=args.noniid)
+    # mega-scale: shards are keyed by GLOBAL virtual node id, built lazily
+    # (a 1M-node corpus costs O(cohort) host memory, and shard content is
+    # independent of construction/access order — prefetcher-thread safe).
+    corpus = SyntheticLM(vocab_size=cfg.vocab_size, num_nodes=population or n,
+                         noniid_alpha=args.noniid, lazy=bool(population))
 
     def loss_fn(p, b, k):
         return train_loss(p, b, cfg, k)
 
     params0, _ = init_params(cfg, jax.random.key(0))
-    state = init_state(params0, n, opt, jax.random.key(1),
+    state = init_state(params0, population or n, opt, jax.random.key(1),
                        compressed=comp is not None)
     start_round = 0
     if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
@@ -225,7 +279,7 @@ def main(argv=None) -> None:
         print(f"restored round {start_round} from {args.ckpt_dir}")
 
     mesh = None
-    if args.engine != "dense" and len(jax.devices()) == n:
+    if not population and args.engine != "dense" and len(jax.devices()) == n:
         mesh = jax.make_mesh((n,), ("nodes",))
 
     schedule_mode = args.schedule
@@ -289,13 +343,16 @@ def main(argv=None) -> None:
             "sparse engine needs #devices == --nodes and a circulant "
             f"topology (devices={len(jax.devices())}, nodes={n}, "
             f"topology={topology.name})")
-    engine = "sparse" if (args.engine != "dense" and eligible) else "dense"
+    if population:
+        engine = "batched"
+    else:
+        engine = "sparse" if (args.engine != "dense" and eligible) else "dense"
     executor = RoundExecutor(
         dcfg_max, loss_fn, opt, engine=engine, mesh=mesh,
         node_axes=("nodes",), use_kernels=args.use_kernels,
         dynamic=args.dispatch == "fused",
         participation=fault_plan is not None, telemetry=tel,
-        overlap=args.overlap)
+        overlap=args.overlap, population=population or None)
 
     # Wire accounting is DEPLOYMENT cost (what a real DFL network ships:
     # engine="auto" = per-neighbor when circulant), not the host-simulation
@@ -324,8 +381,16 @@ def main(argv=None) -> None:
 
     def round_batch(r: int, t1: int):
         """One round's [t1, N, B, ...] batch tree (same data stream the
-        legacy per-round loop fetched)."""
-        b = dict(lm_batches_for_dfl(corpus, t1, n, args.batch, args.seq, r))
+        legacy per-round loop fetched). Mega-scale: cohort slot j streams
+        the shard of the GLOBAL node ``sampler.draw(r)[j]`` — a pure
+        function of (seed, node, step), so prefetch threading cannot
+        reorder shards."""
+        if sampler is not None:
+            b = dict(lm_batches_for_cohort(corpus, t1, sampler.draw(r),
+                                           args.batch, args.seq, r))
+        else:
+            b = dict(lm_batches_for_dfl(corpus, t1, n, args.batch,
+                                        args.seq, r))
         if cfg.has_memory_input:
             m = cfg.memory_tokens or 16
             key = jax.random.key(1000 + r)
@@ -462,6 +527,9 @@ def main(argv=None) -> None:
                 extra = dict(active_nodes=row["active_nodes"],
                              masked_edges=row["masked_edges"],
                              degraded=degraded)
+            if sampler is not None:
+                # mega-scale: the history view's schema-4 cohort columns.
+                extra.update(cohort_size=n, population=population)
             tel.emit("round", track="rounds", name=f"round-{r}",
                      round=r, tau1=row["tau1"], tau2=row["tau2"],
                      loss=row["loss"], consensus_sq=row["consensus_sq"],
@@ -567,6 +635,11 @@ def main(argv=None) -> None:
                 controller.spend_overhead(time.perf_counter() - tb0)
                 sched_rows = (fault_plan.mask_trajectory(taus, r)
                               if fault_plan is not None else taus)
+                if sampler is not None:
+                    # splice the per-round cohort draws in front of the
+                    # (possibly fault-masked) participation columns.
+                    sched_rows = sampler.cohort_trajectory(
+                        sched_rows, r, num_edges=topology.num_edges)
                 t_dispatch = time.perf_counter()
                 with op_stats_delta() as opd:
                     state, metrics = executor.dispatch_trajectory(
@@ -602,13 +675,19 @@ def main(argv=None) -> None:
                     batches = build_batches(r, k, tau1)
             t_dispatch = time.perf_counter()  # sync backends EXECUTE inside
             with op_stats_delta() as opd:     # dispatch
-                if fault_plan is not None:
-                    # widen the uniform chunk to masked participation rows —
-                    # same executable, the masks are just more xs columns.
+                if fault_plan is not None or sampler is not None:
+                    # widen the uniform chunk to masked participation /
+                    # sampled cohort rows — same executable, the masks and
+                    # cohort ids are just more xs columns.
+                    rows = np.tile(np.array([[tau1, tau2]], np.int32),
+                                   (k, 1))
+                    if fault_plan is not None:
+                        rows = fault_plan.mask_trajectory(rows, r)
+                    if sampler is not None:
+                        rows = sampler.cohort_trajectory(
+                            rows, r, num_edges=topology.num_edges)
                     state, metrics = executor.dispatch_trajectory(
-                        state, batches, fault_plan.mask_trajectory(
-                            np.tile(np.array([[tau1, tau2]], np.int32), (k, 1)),
-                            r))
+                        state, batches, rows)
                 else:
                     state, metrics = executor.dispatch(state, batches, tau1,
                                                        tau2)

@@ -13,7 +13,11 @@ per-round realized-participation columns ``active_nodes`` /
 ``masked_edges`` (from event-stream schema 2's sporadic rounds; None on
 rounds that ran before participation tracking, so full-participation
 streams project losslessly) — they are what lets ``repro.obs report``
-attribute loss progress to availability.
+attribute loss progress to availability. View schema_version 4 adds the
+mega-scale cohort columns ``cohort_size`` / ``population`` (batched-
+engine rounds sample a C-of-V cohort; ``train.py --virtual-nodes``
+stamps both on every round event; None on non-sampled runs, so legacy
+streams keep projecting losslessly).
 """
 from __future__ import annotations
 
@@ -21,7 +25,7 @@ from typing import Iterable, List
 
 __all__ = ["HISTORY_SCHEMA_VERSION", "history_view"]
 
-HISTORY_SCHEMA_VERSION = 3
+HISTORY_SCHEMA_VERSION = 4
 
 # Planner decision types that legacy plan_events carried (the
 # controller's ``history`` list mirrored every cause, including
@@ -37,6 +41,7 @@ def history_view(events: Iterable[dict]) -> dict:
         "round": [], "loss": [], "consensus_sq": [],
         "tau1": [], "tau2": [], "round_s": [],
         "active_nodes": [], "masked_edges": [],
+        "cohort_size": [], "population": [],
     }
     for ev in events:
         if ev.get("type") != "round":
@@ -55,6 +60,9 @@ def history_view(events: Iterable[dict]) -> dict:
         # track it) project as None.
         history["active_nodes"].append(d.get("active_nodes"))
         history["masked_edges"].append(d.get("masked_edges"))
+        # schema-4 cohort columns (batched engine / --virtual-nodes).
+        history["cohort_size"].append(d.get("cohort_size"))
+        history["population"].append(d.get("population"))
 
     plan_events: List[dict] = [ev.get("data", {}) for ev in events
                                if ev.get("type") in _PLAN_TYPES]

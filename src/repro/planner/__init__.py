@@ -41,6 +41,7 @@ from repro.planner.cost import (
     wireless_link,
 )
 from repro.planner.bounds import (
+    Availability,
     BoundEval,
     bound_20,
     cdfl_contraction,
@@ -49,6 +50,8 @@ from repro.planner.bounds import (
     lr_condition_19,
     max_eta_19,
     predicted_loss_decrement,
+    sampling_availability,
+    sporadic_zeta,
     stale_mixing_zeta,
 )
 from repro.planner.optimize import (
@@ -69,9 +72,10 @@ __all__ = [
     "RoundCost", "WirelessLinks",
     "comm_compute_cost", "edge_outage", "faded_links", "straggler_links",
     "unit_cost_model", "wireless_link",
-    "BoundEval", "bound_20", "cdfl_contraction", "choco_gamma_star",
-    "effective_zeta", "lr_condition_19", "max_eta_19",
-    "predicted_loss_decrement", "stale_mixing_zeta",
+    "Availability", "BoundEval", "bound_20", "cdfl_contraction",
+    "choco_gamma_star", "effective_zeta", "lr_condition_19", "max_eta_19",
+    "predicted_loss_decrement", "sampling_availability", "sporadic_zeta",
+    "stale_mixing_zeta",
     "DEFAULT_GRID", "Budget", "Plan", "TrajectoryPlan", "evaluate_grid",
     "plan", "plan_trajectory", "rounds_within", "select_plan",
     "AdaptiveController",

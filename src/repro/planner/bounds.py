@@ -35,6 +35,7 @@ __all__ = [
     "effective_zeta",
     "Availability",
     "expected_mixing",
+    "sampling_availability",
     "sporadic_zeta",
     "stale_mixing_zeta",
 ]
@@ -149,6 +150,31 @@ class Availability:
     @property
     def is_full(self) -> bool:
         return self.node_rate >= 1.0 and self.edge_rate >= 1.0
+
+
+def sampling_availability(population: int, cohort: int, *,
+                          resume_tau2: float = 1.0) -> Availability:
+    """Price cohort sampling as participation: sampling rate C/V IS the
+    participation rate.
+
+    A round that activates a uniformly-drawn C-of-V cohort does local
+    work on a C/V fraction of the population and carries gossip on a
+    C/V fraction of its (virtual) edges, so the batched engine's sampled
+    rounds are planned with the SAME ``Availability`` machinery as
+    sporadic participation — ``predicted_loss_decrement(...,
+    availability=sampling_availability(V, C))`` engages ``sporadic_zeta``
+    exactly as a Bernoulli(C/V) fault plan would. At full participation
+    (``cohort == population``) the result ``is_full``, so the bound
+    degenerates EXACTLY to the deterministic Proposition-1 evaluation
+    (tests/test_planner.py pins the analogous mask degeneration).
+    """
+    if not (1 <= cohort <= population):
+        raise ValueError(
+            f"need 1 <= cohort <= population, got cohort={cohort} "
+            f"population={population}")
+    rate = cohort / population
+    return Availability(node_rate=rate, edge_rate=rate,
+                        resume_tau2=resume_tau2)
 
 
 def expected_mixing(topology: Topology, edge_rate: float) -> np.ndarray:

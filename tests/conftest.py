@@ -41,14 +41,16 @@ def _install_hypothesis_fallback() -> None:
     def booleans():
         return _Strategy(lambda r: bool(r.getrandbits(1)))
 
-    def given(*strategies):
+    def given(*strategies, **kw_strategies):
         def decorate(fn):
             def run(*args, **kwargs):
                 rng = random.Random(0)
                 n = min(getattr(run, "_max_examples", 10), 10)
                 for _ in range(n):
                     drawn = [s.sample(rng) for s in strategies]
-                    fn(*args, *drawn, **kwargs)
+                    kw_drawn = {name: s.sample(rng)
+                                for name, s in kw_strategies.items()}
+                    fn(*args, *drawn, **kwargs, **kw_drawn)
 
             # NOT functools.wraps: copying __wrapped__ would expose the
             # strategy-filled params as pytest fixture requests.

@@ -303,7 +303,7 @@ def test_production_audits_pass_via_cli(tmp_path):
         "donation", "recompile", "collective-matching",
         "telemetry-neutrality", "participation-recompile",
         "participation-collectives", "overlap-recompile",
-        "overlap-collectives"}
+        "overlap-collectives", "cohort-recompile"}
     assert all(r["ok"] for r in results), results
     donation = next(r for r in results if r["name"] == "donation")
     # the whole DFLState carry: params, opt_state, rng, round_idx.

@@ -1,0 +1,120 @@
+"""Property-based tests of ``repro.faults.CohortSampler``.
+
+The sampler is the mega-scale run's only source of randomness outside
+``DFLState.rng``, so its contract is load-bearing for determinism and
+checkpoint restart: draws are a pure function of (seed, round) via
+``np.random.SeedSequence([seed, round])`` (round r's cohort never
+depends on which rounds were evaluated before it), uniform WITHOUT
+replacement, exactly C-sized and sorted — and at full participation
+(C == V) the sorted draw IS ``arange(V)``, so the cohort trajectory row
+degenerates bitwise to the legacy participation row.
+
+Runs under real hypothesis when installed, else the deterministic
+fallback shim in tests/conftest.py.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.faults import CohortSampler, FaultPlan, SporadicParticipation
+from repro.core.topology import ring
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       pop=st.integers(min_value=1, max_value=512),
+       r=st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=50, deadline=None)
+def test_draw_shape_range_no_replacement(seed, pop, r):
+    cohort = max(1, pop // 3)
+    s = CohortSampler(population=pop, cohort=cohort, seed=seed)
+    ids = s.draw(r)
+    assert ids.shape == (cohort,) and ids.dtype == np.int32
+    assert ids.min() >= 0 and ids.max() < pop
+    assert len(np.unique(ids)) == cohort          # without replacement
+    assert (np.sort(ids) == ids).all()            # sorted draw
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       r=st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=25, deadline=None)
+def test_draw_deterministic_and_round_local(seed, r):
+    """Pure in (seed, round): re-draws agree across sampler instances,
+    and drawing OTHER rounds first (the restart scenario) never shifts
+    round r's cohort."""
+    a = CohortSampler(population=100, cohort=10, seed=seed)
+    b = CohortSampler(population=100, cohort=10, seed=seed)
+    for other in (0, r + 1, max(0, r - 1)):
+        b.draw(other)
+    np.testing.assert_array_equal(a.draw(r), b.draw(r))
+    want = np.sort(np.random.default_rng(
+        np.random.SeedSequence([seed, r])).choice(
+            100, size=10, replace=False)).astype(np.int32)
+    np.testing.assert_array_equal(a.draw(r), want)
+
+
+def test_draws_approximately_uniform():
+    """Every node's inclusion frequency concentrates at C/V (a biased
+    generator or an off-by-one in the id range shows up here)."""
+    pop, cohort, rounds = 40, 8, 2000
+    s = CohortSampler(population=pop, cohort=cohort, seed=5)
+    counts = np.zeros(pop)
+    for r in range(rounds):
+        counts[s.draw(r)] += 1
+    freq = counts / rounds
+    rate = cohort / pop
+    # 4-sigma band for a Bernoulli(rate) mean over `rounds` draws.
+    tol = 4 * np.sqrt(rate * (1 - rate) / rounds)
+    assert np.all(np.abs(freq - rate) < tol), (freq.min(), freq.max(), rate)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       pop=st.integers(min_value=1, max_value=64),
+       r=st.integers(min_value=0, max_value=1000))
+@settings(max_examples=25, deadline=None)
+def test_full_population_draw_is_identity(seed, pop, r):
+    s = CohortSampler(population=pop, cohort=pop, seed=seed)
+    np.testing.assert_array_equal(s.draw(r),
+                                  np.arange(pop, dtype=np.int32))
+
+
+def test_full_population_row_reproduces_legacy_row_bitwise():
+    """C == V: splicing the (identity) cohort into a fault plan's masked
+    participation rows yields exactly [tau1, tau2, arange, legacy row
+    tail] — the batched engine runs the legacy sporadic round bitwise."""
+    topo = ring(8)
+    plan = FaultPlan(topo, (SporadicParticipation(0.7, 0.6, 0, 50),),
+                     seed=9)
+    taus = np.tile(np.array([[2, 1]], np.int32), (5, 1))
+    legacy = plan.mask_trajectory(taus, round0=3)
+    s = CohortSampler(population=8, cohort=8, seed=123)
+    rows = s.cohort_trajectory(legacy, round0=3, num_edges=topo.num_edges)
+    assert rows.shape == (5, 2 + 2 * 8 + topo.num_edges)
+    np.testing.assert_array_equal(rows[:, :2], legacy[:, :2])
+    np.testing.assert_array_equal(rows[:, 2:10],
+                                  np.tile(np.arange(8), (5, 1)))
+    np.testing.assert_array_equal(rows[:, 10:], legacy[:, 2:])
+
+
+def test_cohort_trajectory_plain_rows_pad_all_active():
+    s = CohortSampler(population=20, cohort=4, seed=1)
+    taus = np.array([[2, 1], [3, 0]], np.int32)
+    rows = s.cohort_trajectory(taus, round0=7, num_edges=4)
+    assert rows.shape == (2, 2 + 8 + 4)
+    np.testing.assert_array_equal(rows[0, 2:6], s.draw(7))
+    np.testing.assert_array_equal(rows[1, 2:6], s.draw(8))
+    assert (rows[:, 6:] == 1).all()
+    # empty trajectory keeps the widened row shape.
+    assert s.cohort_trajectory(np.zeros((0, 2), np.int32),
+                               num_edges=4).shape == (0, 14)
+
+
+def test_spec_roundtrip_and_validation():
+    s = CohortSampler(population=1000, cohort=32, seed=77)
+    assert CohortSampler.from_spec(s.to_spec()) == s
+    assert abs(s.rate - 0.032) < 1e-12
+    import pytest
+    with pytest.raises(ValueError):
+        CohortSampler(population=4, cohort=5)
+    with pytest.raises(ValueError):
+        CohortSampler(population=4, cohort=0)
+    with pytest.raises(ValueError):
+        s.cohort_trajectory(np.zeros((2, 3), np.int32), num_edges=4)

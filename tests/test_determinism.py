@@ -1,0 +1,301 @@
+"""Determinism regression suite for the mega-scale (batched) path.
+
+Three contracts, each of which a seeded re-run must reproduce EXACTLY:
+
+  * **train twice == same history**: an end-to-end ``train.py`` session
+    (dense and batched engines) run twice with identical seeds, faults
+    and cohorts writes an identical ``--history-out`` JSON, excluding
+    only the monotonic-clock fields (``round_s``) — losses, schedules,
+    cohort columns and compile counters are all bit-stable.
+  * **shard-order pinning**: the lazy ``SyntheticLM`` keys every
+    per-node chain by ``SeedSequence([seed, node])``, so shard content
+    is independent of construction order, access order, and prefetcher
+    THREADING — and ``lm_batches_for_cohort`` streams by GLOBAL node
+    id, so a node's data never depends on which cohort slot it lands in.
+  * **checkpoint restart under sampling**: resuming mid-run from an
+    atomic checkpoint with a sampled cohort continues bitwise — the
+    cohort draw is a pure function of (sampler seed, round), and every
+    RNG the round consumes lives in ``DFLState`` (rng, round_idx), so
+    nothing outside the checkpoint can shift the continuation.
+"""
+import json
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.core import DFLConfig, RoundExecutor, init_state, ring
+from repro.data.lm import (SyntheticLM, lm_batches_for_cohort,
+                           lm_batches_for_dfl)
+from repro.faults import CohortSampler
+from repro.optim import sgd
+
+# ---------------------------------------------------------------------------
+# train twice -> identical history JSON
+# ---------------------------------------------------------------------------
+
+# per-round wall-clock stamps are the ONLY fields a deterministic re-run
+# may legitimately change.
+_CLOCK_FIELDS = ("round_s",)
+
+
+def _train_history(tmp_path, tag, argv):
+    from repro.launch import train as train_cli
+
+    out = tmp_path / f"hist_{tag}.json"
+    train_cli.main(list(argv) + ["--history-out", str(out)])
+    h = json.loads(out.read_text())
+    for f in _CLOCK_FIELDS:
+        h.pop(f, None)
+    return h
+
+
+def test_train_twice_identical_history_dense(tmp_path):
+    argv = ["--arch", "qwen3-1.7b", "--nodes", "2", "--rounds", "3",
+            "--batch", "1", "--seq", "16", "--log-every", "10"]
+    a = _train_history(tmp_path, "dense_a", argv)
+    b = _train_history(tmp_path, "dense_b", argv)
+    assert a == b
+    assert len(a["loss"]) == 3
+
+
+def test_train_twice_identical_history_batched(tmp_path):
+    """Batched engine with a sampled cohort + injected faults: the lazy
+    corpus, the prefetcher thread, the cohort draws and the fault masks
+    must all be pinned."""
+    argv = ["--arch", "qwen3-1.7b", "--nodes", "4", "--topology", "ring",
+            "--rounds", "4", "--batch", "1", "--seq", "16",
+            "--virtual-nodes", "16", "--cohort", "4", "--cohort-seed", "3",
+            "--faults",
+            '{"faults": [{"kind": "sporadic", "p_node": 0.8, '
+            '"p_edge": 0.9, "r_start": 0, "r_stop": 100}], "seed": 7}',
+            "--log-every", "2"]
+    a = _train_history(tmp_path, "batched_a", argv)
+    b = _train_history(tmp_path, "batched_b", argv)
+    assert a == b
+    # schema-4 cohort columns are stamped on every sampled round.
+    assert a["cohort_size"] == [4] * 4
+    assert a["population"] == [16] * 4
+    # cohort draws are schedule data on ONE executable: no post-warmup
+    # compiles anywhere in the session.
+    assert a["compile_count"] == a["compile_count_warmup"]
+
+
+# ---------------------------------------------------------------------------
+# shard-order pinning (lazy corpus + cohort streaming)
+# ---------------------------------------------------------------------------
+
+
+def _batch_leaves(b):
+    return {k: np.asarray(v) for k, v in b.items()}
+
+
+def test_lazy_shards_independent_of_access_order():
+    v = 64
+    fwd = SyntheticLM(vocab_size=32, num_nodes=v, seed=5, lazy=True)
+    rev = SyntheticLM(vocab_size=32, num_nodes=v, seed=5, lazy=True)
+    # warm the caches in OPPOSITE orders (the eager builder was
+    # order-dependent: chains drawn sequentially from one rng stream).
+    for n in range(v):
+        fwd.batch(n, 1, 8, step=0)
+    for n in reversed(range(v)):
+        rev.batch(n, 1, 8, step=0)
+    for n in (0, 7, 31, 63):
+        a = _batch_leaves(fwd.batch(n, 2, 12, step=3))
+        b = _batch_leaves(rev.batch(n, 2, 12, step=3))
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_lazy_shards_threadsafe_by_idempotence():
+    """Prefetcher threading: concurrent first-touch of the same shards
+    from many threads yields the same bytes as serial access."""
+    corpus = SyntheticLM(vocab_size=32, num_nodes=128, seed=9, lazy=True)
+    serial = SyntheticLM(vocab_size=32, num_nodes=128, seed=9, lazy=True)
+    nodes = list(range(128)) * 2
+    with ThreadPoolExecutor(max_workers=8) as pool:
+        got = list(pool.map(
+            lambda n: _batch_leaves(corpus.batch(n, 1, 8, step=1)), nodes))
+    for n, b in zip(nodes, got):
+        want = _batch_leaves(serial.batch(n, 1, 8, step=1))
+        for k in want:
+            np.testing.assert_array_equal(b[k], want[k])
+
+
+def test_cohort_batches_stream_by_global_id():
+    """Slot j streams GLOBAL node ids[j]: an identity cohort reproduces
+    the legacy loader bitwise, and a node's shard is the same whatever
+    slot (or draw order) it arrives in."""
+    corpus = SyntheticLM(vocab_size=32, num_nodes=16, seed=2, lazy=True)
+    ids = np.arange(4, dtype=np.int32)
+    a = lm_batches_for_cohort(corpus, 2, ids, 1, 8, round_idx=5)
+    b = lm_batches_for_dfl(corpus, 2, 4, 1, 8, round_idx=5)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    # permuted cohort: slot contents follow the ids, not the slots.
+    perm = np.array([14, 3, 9, 6], np.int32)
+    c = lm_batches_for_cohort(corpus, 2, perm, 1, 8, round_idx=5)
+    sorted_ids = np.sort(perm)
+    d = lm_batches_for_cohort(corpus, 2, sorted_ids, 1, 8, round_idx=5)
+    order = np.argsort(perm)
+    for k in c:
+        np.testing.assert_array_equal(np.asarray(c[k])[:, order],
+                                      np.asarray(d[k]))
+    with pytest.raises(ValueError, match="1-D"):
+        lm_batches_for_cohort(corpus, 2, perm[None], 1, 8, round_idx=0)
+
+
+def test_eager_corpus_unchanged_by_lazy_refactor():
+    """The eager default must keep its historical sequential-rng chains
+    (lazy is opt-in; the two modes intentionally differ)."""
+    eager = SyntheticLM(vocab_size=32, num_nodes=4, seed=5)
+    lazy = SyntheticLM(vocab_size=32, num_nodes=4, seed=5, lazy=True)
+    rng = np.random.default_rng(5)
+    want_shared_nxt = rng.integers(0, 32, size=(32, 16))
+    np.testing.assert_array_equal(eager._shared[0], want_shared_nxt)
+    assert not np.array_equal(eager._shared[0], lazy._shared[0])
+
+
+# ---------------------------------------------------------------------------
+# checkpoint restart under sampling
+# ---------------------------------------------------------------------------
+
+DIM = 7
+TAU1, TAU2 = 2, 1
+
+
+def noisy_loss(p, b, k=None):
+    jitter = 0.05 * jax.random.normal(k, p["w"].shape)
+    return jnp.mean((p["w"] + jitter - b) ** 2)
+
+
+def _ckpt_tree(state):
+    """Everything a bitwise resume needs, as npz-serializable leaves.
+
+    The cohort draw itself needs NO entry: it is a pure function of the
+    sampler's (seed, round), and the round index rides DFLState."""
+    return {
+        "params": state.params,
+        "opt_state": state.opt_state,
+        "hat_params": state.hat_params,
+        "rng": jax.random.key_data(state.rng),
+        "round_idx": np.asarray(state.round_idx),
+    }
+
+
+def _state_from_tree(template_state, tree):
+    return template_state._replace(
+        params=tree["params"],
+        opt_state=tree["opt_state"],
+        hat_params=tree["hat_params"],
+        rng=jax.random.wrap_key_data(jnp.asarray(tree["rng"])),
+        round_idx=jnp.asarray(tree["round_idx"]))
+
+
+def assert_model_state_bitwise(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a.params),
+                    jax.tree_util.tree_leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for x, y in zip(jax.tree_util.tree_leaves(a.opt_state),
+                    jax.tree_util.tree_leaves(b.opt_state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert int(a.round_idx) == int(b.round_idx)
+
+
+def test_checkpoint_restart_under_sampling_bitwise(tmp_path):
+    """Atomic-checkpoint resume mid-run with a SAMPLED cohort continues
+    bitwise (the batched analogue of PR 9's drain-at-boundary restart):
+    rounds 2..3 dispatched by a fresh executor from the restored state
+    equal the uninterrupted run, because round r's cohort redraws from
+    (seed, r) and all consumed RNG lives in DFLState."""
+    pop, k_total = 16, 4
+    topo = ring(4)
+    opt = sgd(0.1)
+    cfg = DFLConfig(tau1=TAU1, tau2=TAU2, topology=topo)
+    sampler = CohortSampler(population=pop, cohort=4, seed=11)
+    rows = sampler.cohort_trajectory(
+        np.tile(np.array([[TAU1, TAU2]], np.int32), (k_total, 1)),
+        round0=0, num_edges=topo.num_edges)
+    batches = jax.random.normal(jax.random.key(7),
+                                (k_total, TAU1, 4, DIM))
+
+    def fresh():
+        return init_state({"w": jnp.zeros((DIM,))}, pop, opt,
+                          jax.random.key(1))
+
+    # uninterrupted 4-round reference.
+    ex = RoundExecutor(cfg, noisy_loss, opt, engine="batched",
+                       population=pop, donate=False)
+    ref, _ = ex.dispatch_trajectory(fresh(), batches, rows)
+
+    # run rounds 0..1, checkpoint through DISK, resume in a fresh
+    # executor, run rounds 2..3.
+    ex_a = RoundExecutor(cfg, noisy_loss, opt, engine="batched",
+                         population=pop, donate=False)
+    mid, _ = ex_a.dispatch_trajectory(
+        fresh(), jax.tree_util.tree_map(lambda x: x[:2], batches),
+        rows[:2])
+    save_checkpoint(str(tmp_path), 2, _ckpt_tree(mid), {"loss": 0.0})
+    del ex_a, mid
+
+    restored_tree, step = restore_checkpoint(str(tmp_path),
+                                             _ckpt_tree(fresh()))
+    assert step == 2
+    resumed = _state_from_tree(fresh(), restored_tree)
+    assert int(resumed.round_idx) == 2
+    ex_b = RoundExecutor(cfg, noisy_loss, opt, engine="batched",
+                         population=pop, donate=False)
+    # the resumed half replays the SAME absolute rounds: the sampler
+    # re-derives rounds 2..3's cohorts from (seed, round) alone.
+    rows_tail = sampler.cohort_trajectory(
+        np.tile(np.array([[TAU1, TAU2]], np.int32), (2, 1)),
+        round0=2, num_edges=topo.num_edges)
+    np.testing.assert_array_equal(rows_tail, rows[2:])
+    end, _ = ex_b.dispatch_trajectory(
+        resumed, jax.tree_util.tree_map(lambda x: x[2:], batches),
+        rows_tail)
+    assert_model_state_bitwise(end, ref)
+
+
+def test_checkpoint_restart_with_choco_hat(tmp_path):
+    """Same restart, CHOCO compression: hat_params is part of the
+    checkpointed state and the resumed error-feedback chain is bitwise."""
+    from repro.core import make_compressor
+
+    pop = 12
+    topo = ring(4)
+    opt = sgd(0.1)
+    comp = make_compressor("qsgd", levels=4)
+    cfg = DFLConfig(tau1=TAU1, tau2=TAU2, topology=topo, compression=comp,
+                    gamma=0.5)
+    sampler = CohortSampler(population=pop, cohort=4, seed=21)
+    rows = sampler.cohort_trajectory(
+        np.tile(np.array([[TAU1, TAU2]], np.int32), (4, 1)),
+        round0=0, num_edges=topo.num_edges)
+    batches = jax.random.normal(jax.random.key(3), (4, TAU1, 4, DIM))
+
+    def fresh():
+        return init_state({"w": jnp.zeros((DIM,))}, pop, opt,
+                          jax.random.key(2), compressed=True)
+
+    ex = RoundExecutor(cfg, noisy_loss, opt, engine="batched",
+                       population=pop, donate=False)
+    ref, _ = ex.dispatch_trajectory(fresh(), batches, rows)
+
+    mid, _ = ex.dispatch_trajectory(
+        fresh(), jax.tree_util.tree_map(lambda x: x[:2], batches),
+        rows[:2])
+    save_checkpoint(str(tmp_path), 2, _ckpt_tree(mid), {})
+    restored_tree, _ = restore_checkpoint(str(tmp_path),
+                                          _ckpt_tree(fresh()))
+    resumed = _state_from_tree(fresh(), restored_tree)
+    end, _ = ex.dispatch_trajectory(
+        resumed, jax.tree_util.tree_map(lambda x: x[2:], batches),
+        rows[2:])
+    assert_model_state_bitwise(end, ref)
+    for x, y in zip(jax.tree_util.tree_leaves(end.hat_params),
+                    jax.tree_util.tree_leaves(ref.hat_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
